@@ -1,0 +1,44 @@
+"""Subprocess body for bench_scaling: runs MR-HAP on the forced device
+count and prints one JSON line."""
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    pad_similarity, pairwise_similarity, run_mrhap, set_preferences,
+    stack_levels,
+)
+from repro.core.preferences import median_preference
+from repro.data import gaussian_blobs
+
+
+def main(n: int, levels: int, iterations: int, mode: str) -> None:
+    x, _ = gaussian_blobs(n=n, k=7, seed=0)
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    s3 = stack_levels(s, levels)
+    workers = len(jax.devices())
+    mesh = jax.make_mesh((workers,), ("workers",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    s3p, n0 = pad_similarity(s3, workers)
+    # compile once, then time
+    res = run_mrhap(s3p, mesh, iterations=iterations, damping=0.6,
+                    comm_mode=mode)
+    jax.block_until_ready(res.exemplars)
+    t0 = time.time()
+    res = run_mrhap(s3p, mesh, iterations=iterations, damping=0.6,
+                    comm_mode=mode)
+    jax.block_until_ready(res.exemplars)
+    wall = time.time() - t0
+    print(json.dumps({
+        "workers": workers, "mode": mode, "n": n, "levels": levels,
+        "iterations": iterations, "wall_s": wall,
+        "k_level0": int(res.n_clusters[0]),
+    }))
+
+
+if __name__ == "__main__":
+    main(int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3]), sys.argv[4])

@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this container the oracle path is the performance-relevant one (Pallas
+interpret mode is a correctness harness, orders slower than compiled jnp);
+the derived column records the kernel's analytic FLOPs/bytes so the TPU
+roofline expectation is on record next to the measured oracle time.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run(n: int = 1024) -> list:
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(-rng.random((n, n)).astype(np.float32) * 10)
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    r = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    tau = jnp.full((n,), jnp.inf)
+    c = jnp.zeros((n,))
+    phi = jnp.zeros((n,))
+    x = jnp.asarray(rng.standard_normal((n, 64)).astype(np.float32))
+
+    # arrays passed as ARGUMENTS (closure constants get constant-folded
+    # away by XLA, timing nothing)
+    resp_j = jax.jit(lambda s_, a_: ref.responsibility(
+        s_, a_, tau, r, 0.5))
+    avail_j = jax.jit(lambda r_, a_: ref.availability(r_, c, phi, a_, 0.5))
+    sim_j = jax.jit(lambda x_: ref.neg_sqeuclidean(x_, x_))
+    resp = lambda: resp_j(s, a)
+    avail = lambda: avail_j(r, a)
+    sim = lambda: sim_j(x)
+
+    bh, sq, dh = 4, 512, 64
+    qkv = jnp.asarray(rng.standard_normal((bh, sq, dh)).astype(np.float32))
+    flash_j = jax.jit(lambda q_: ref.flash_attention(q_, q_, q_, True))
+    flash = lambda: flash_j(qkv)
+
+    rows = [
+        {"name": "responsibility", "us": _time(resp) * 1e6,
+         "flops": 4 * n * n, "bytes": 4 * n * n * 4},
+        {"name": "availability", "us": _time(avail) * 1e6,
+         "flops": 4 * n * n, "bytes": 4 * n * n * 4},
+        {"name": "similarity", "us": _time(sim) * 1e6,
+         "flops": 2 * n * n * 64, "bytes": (2 * n * 64 + n * n) * 4},
+        {"name": "flash_attention", "us": _time(flash) * 1e6,
+         "flops": 4 * bh * sq * sq * dh,
+         "bytes": 4 * bh * sq * dh * 4},  # flash: O(S*D), not O(S^2)
+    ]
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        ai = r["flops"] / r["bytes"]
+        print(f"kernel_{r['name']},{r['us']:.0f},"
+              f"flops={r['flops']:.2e} ai={ai:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Roofline table builder: reads dry-run JSONs (launch/dryrun.py --out) and
+emits the §Roofline rows; also rooflines the MR-HAP clustering workload
+analytically from its comm/compute model."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.mrhap import comm_bytes_per_iteration
+from repro.launch.hlo_analysis import V5E
+
+
+def load_results(pattern: str = "results/dryrun/*.json") -> list:
+    rows = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            data = json.load(f)
+        rows.extend(data.get("results", []))
+    return rows
+
+
+def format_row(r: dict) -> str:
+    ratio = r.get("useful_ratio")
+    peak = (r.get("memory") or {}).get("peak_bytes")
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+            f"coll={r['collective_s']:.3e}s dom={r['dominant']:10s} "
+            f"useful={ratio:.3f} " if ratio is not None else "useful=n/a "
+            ) + (f"peakGB={peak / 1e9:.2f}" if peak else "")
+
+
+def hap_roofline(n: int = 1_000_000, levels: int = 3, chips: int = 256
+                 ) -> dict:
+    """MR-HAP at big-data scale on a v5e pod, analytic: per iteration the
+    update touches 3 * L * (N/chips) * N f32 values (S, rho, alpha rows),
+    does ~8 flops per value, and in stats mode ships O(L*N) statistics."""
+    rows_per_chip = n // chips
+    values = 3 * levels * rows_per_chip * n
+    flops = 8.0 * values
+    hbm = 4.0 * values
+    wire_stats = comm_bytes_per_iteration(n, levels, chips, "stats") / chips
+    wire_transpose = comm_bytes_per_iteration(
+        n, levels, chips, "transpose") / chips
+    out = {
+        "compute_s": flops / V5E["flops_bf16"],
+        "memory_s": hbm / V5E["hbm_bw"],
+        "collective_s_stats": wire_stats / V5E["ici_bw"],
+        "collective_s_transpose": wire_transpose / V5E["ici_bw"],
+    }
+    out["dominant"] = max(
+        ("compute", out["compute_s"]), ("memory", out["memory_s"]),
+        ("collective", out["collective_s_stats"]), key=lambda t: t[1])[0]
+    return out
+
+
+def main():
+    rows = load_results()
+    if rows:
+        for r in rows:
+            print(format_row(r))
+    h = hap_roofline()
+    print(f"hap_roofline_1M_points,0,"
+          f"mem={h['memory_s']:.3f}s coll_stats={h['collective_s_stats']:.4f}s "
+          f"coll_transpose={h['collective_s_transpose']:.3f}s dom={h['dominant']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

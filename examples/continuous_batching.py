@@ -1,0 +1,47 @@
+"""Continuous batching demo: 6 requests stream through 2 decode slots.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+
+Shows requests with different budgets finishing at different times, slots
+being reused mid-flight, and per-row cache lengths diverging — the serving
+pattern the per-row ring caches (models/layers/attention.py) exist for.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model_init
+from repro.serve.batching import ContinuousBatchingEngine
+
+
+def main():
+    cfg = get_arch("tinyllama-1.1b-smoke")
+    params, _ = model_init(jax.random.PRNGKey(0), cfg)
+    engine = ContinuousBatchingEngine(cfg, params, slots=2, max_len=96)
+
+    rng = np.random.default_rng(0)
+    budgets = [4, 10, 6, 8, 3, 5]
+    rids = [engine.submit(rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                          max_new=m) for m in budgets]
+    print(f"submitted {len(rids)} requests into 2 slots; draining...")
+
+    steps = 0
+    while engine.queue or any(s.request_id is not None
+                              for s in engine.slots):
+        engine.step()
+        steps += 1
+        done = sorted(engine.finished)
+        active = [s.request_id for s in engine.slots]
+        print(f"step {steps:2d}: slots={active} finished={done}")
+
+    for rid, budget in zip(rids, budgets):
+        out = engine.finished[rid]
+        assert len(out) == budget
+        print(f"request {rid}: {len(out)} tokens -> {out.tolist()}")
+    print(f"drained in {steps} decode steps "
+          f"(sequential would need {sum(budgets)})")
+
+
+if __name__ == "__main__":
+    main()

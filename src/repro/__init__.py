@@ -1,0 +1,8 @@
+"""repro: Parallel Hierarchical Affinity Propagation (MR-HAP) on JAX/TPU.
+
+Subpackages: core (the paper), kernels (Pallas), baselines, models (10
+assigned archs), sharding, train, serve, data, checkpoint, runtime,
+configs, launch. See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.baselines.canopy import canopy_centers
+from repro.baselines.hkmeans import hierarchical_kmeans
+from repro.baselines.kmeans import kmeans, kmeans_distributed
+
+__all__ = ["canopy_centers", "hierarchical_kmeans", "kmeans",
+           "kmeans_distributed"]

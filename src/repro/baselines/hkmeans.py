@@ -1,0 +1,66 @@
+"""Hierarchical K-Means (HK-Means) — the paper's comparison baseline (§4.2):
+Mahout's "Top Down" level-wise K-means, seeded by Canopy clustering.
+
+Top level first: canopy discovers k_top centers over all points; each
+cluster is then recursively re-clustered for the next (finer) level. Labels
+are reported in the same (L, N) orientation as HAP: level 0 = finest.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.canopy import auto_thresholds, canopy_centers
+from repro.baselines.kmeans import kmeans
+
+
+class HKMeansResult(NamedTuple):
+    labels: np.ndarray      # (L, N) dense cluster ids, level 0 = finest
+    n_clusters: np.ndarray  # (L,)
+
+
+def hierarchical_kmeans(
+    x: np.ndarray, levels: int = 3, *, branch: int = 3, seed: int = 0,
+    kmeans_iterations: int = 25,
+) -> HKMeansResult:
+    """Top-down: canopy picks k at the top; every cluster splits into
+    ``branch`` children per level going down."""
+    x = np.asarray(x, np.float32)
+    n = len(x)
+    t1, t2 = auto_thresholds(x, seed)
+    seeds = canopy_centers(x, t1, t2, seed)
+    k_top = max(2, len(seeds))
+
+    # coarsest level
+    res = kmeans(jnp.asarray(x), k_top, iterations=kmeans_iterations,
+                 init_centers=jnp.asarray(seeds))
+    labels_top = np.asarray(res.labels)
+
+    all_labels = [labels_top]
+    current = labels_top
+    rng = np.random.default_rng(seed)
+    for _ in range(levels - 1):
+        nxt = np.zeros(n, np.int64)
+        offset = 0
+        for c in np.unique(current):
+            idx = np.where(current == c)[0]
+            k_c = min(branch, len(idx))
+            if k_c <= 1:
+                nxt[idx] = offset
+                offset += 1
+                continue
+            sub = kmeans(
+                jnp.asarray(x[idx]), k_c, iterations=kmeans_iterations,
+                key=jax.random.PRNGKey(int(rng.integers(0, 2**31))))
+            nxt[idx] = offset + np.asarray(sub.labels)
+            offset += k_c
+        all_labels.append(nxt)
+        current = nxt
+
+    # reorder: level 0 = finest (match HAP orientation)
+    stack = np.stack(all_labels[::-1]).astype(np.int32)
+    counts = np.array([len(np.unique(l)) for l in stack], np.int32)
+    return HKMeansResult(stack, counts)

@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (
+    CheckpointManager, restore_tree, save_tree,
+)
+
+__all__ = ["CheckpointManager", "restore_tree", "save_tree"]

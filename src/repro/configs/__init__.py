@@ -1,0 +1,7 @@
+from repro.configs.base import (
+    ArchConfig, ShapeConfig, SHAPES, applicable_shapes,
+)
+from repro.configs.registry import ARCHS, arch_names, get_arch
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "applicable_shapes",
+           "ARCHS", "arch_names", "get_arch"]

@@ -1,0 +1,4 @@
+"""Arch config: internlm2-20b (see registry.py for the figures)."""
+from repro.configs.registry import internlm2_20b as CONFIG
+
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""Arch config: qwen2.5-32b (see registry.py for the figures)."""
+from repro.configs.registry import qwen25_32b as CONFIG
+
+SMOKE = CONFIG.reduced()

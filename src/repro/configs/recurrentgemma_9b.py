@@ -1,0 +1,4 @@
+"""Arch config: recurrentgemma-9b (see registry.py for the figures)."""
+from repro.configs.registry import recurrentgemma_9b as CONFIG
+
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""Arch config: whisper-base (see registry.py for the figures)."""
+from repro.configs.registry import whisper_base as CONFIG
+
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,4 @@
+"""Arch config: xlstm-1.3b (see registry.py for the figures)."""
+from repro.configs.registry import xlstm_1_3b as CONFIG
+
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,39 @@
+# The paper's primary contribution: (Hierarchical) Affinity Propagation and
+# its distributed MapReduce-style parallelization, in JAX.
+from repro.core.affinity import (
+    APResult,
+    affinity_propagation,
+    availability_update,
+    masked_top2,
+    net_similarity,
+    responsibility_update,
+)
+from repro.core.assignments import Hierarchy, canonicalize, link_hierarchy
+from repro.core.hap import HAPResult, HAPState, extract_exemplars, run_hap
+from repro.core.metrics import nmi, purity
+from repro.core.mrhap import (
+    MRHAPResult,
+    comm_bytes_per_iteration,
+    pad_similarity,
+    run_mrhap,
+    run_mrhap_2d,
+)
+from repro.core.preferences import make_preferences
+from repro.core.streaming import converged_ap, streaming_hap
+from repro.core.similarity import (
+    pairwise_similarity,
+    pairwise_similarity_blockwise,
+    set_preferences,
+    stack_levels,
+)
+
+__all__ = [
+    "APResult", "affinity_propagation", "availability_update", "masked_top2",
+    "net_similarity", "responsibility_update", "Hierarchy", "canonicalize",
+    "link_hierarchy", "HAPResult", "HAPState", "extract_exemplars", "run_hap",
+    "nmi", "purity", "MRHAPResult", "comm_bytes_per_iteration",
+    "pad_similarity", "run_mrhap", "run_mrhap_2d", "make_preferences",
+    "converged_ap",
+    "streaming_hap", "pairwise_similarity",
+    "pairwise_similarity_blockwise", "set_preferences", "stack_levels",
+]

@@ -1,0 +1,56 @@
+"""Cluster-assignment post-processing (paper Job 3 + hierarchy linking)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Hierarchy(NamedTuple):
+    exemplars: np.ndarray   # (L, N) exemplar index per point per level
+    labels: np.ndarray      # (L, N) dense cluster ids (0..k_l-1)
+    n_clusters: np.ndarray  # (L,)
+    parents: list           # parents[l][c] = cluster id at level l+1
+
+
+def canonicalize(e: jnp.ndarray) -> jnp.ndarray:
+    """Resolve one indirection: points follow their exemplar's exemplar.
+
+    Standard AP cleanup — if e[i] = j but e[j] = j' != j, point i re-targets
+    the true exemplar j'. One pass suffices after convergence.
+    """
+    return e[e]
+
+
+def dense_labels(e: np.ndarray) -> tuple[np.ndarray, int]:
+    """Map exemplar indices to contiguous cluster ids."""
+    uniq, inv = np.unique(np.asarray(e), return_inverse=True)
+    return inv.astype(np.int32), int(uniq.size)
+
+
+def link_hierarchy(exemplars: jnp.ndarray) -> Hierarchy:
+    """Build parent links: a level-l cluster's parent is the level-(l+1)
+    cluster of its exemplar point (paper §2: tiered aggregation)."""
+    e = np.asarray(exemplars)
+    levels, n = e.shape
+    e = np.stack([np.asarray(canonicalize(jnp.asarray(e[l]))) for l in range(levels)])
+    labels = np.zeros_like(e)
+    counts = np.zeros((levels,), np.int32)
+    uniq_per_level = []
+    for l in range(levels):
+        lab, k = dense_labels(e[l])
+        labels[l] = lab
+        counts[l] = k
+        uniq_per_level.append(np.unique(e[l]))
+    parents = []
+    for l in range(levels - 1):
+        ex_pts = uniq_per_level[l]            # data-point index of each cluster's exemplar
+        parents.append(labels[l + 1][ex_pts])  # that point's cluster one level up
+    return Hierarchy(e, labels, counts, parents)
+
+
+def recolor_by_exemplar(values: np.ndarray, exemplars: np.ndarray) -> np.ndarray:
+    """Paper §4.1: recolor every member with its exemplar's value (images)."""
+    return np.asarray(values)[np.asarray(exemplars)]

@@ -1,0 +1,51 @@
+"""MoE expert-affinity analysis (DESIGN §4.2): HAP over router statistics.
+
+Router probabilities over a token batch define a co-activation signature
+per expert; AP clusters experts by signature similarity WITHOUT presetting
+a cluster count — redundant experts (experts the router treats
+interchangeably) surface as multi-member clusters, informing expert-merge /
+capacity decisions. Pure analysis hook: reads MoEOut.router_probs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affinity import affinity_propagation
+from repro.core.assignments import canonicalize
+from repro.core.similarity import pairwise_similarity, set_preferences
+
+
+class ExpertClusters(NamedTuple):
+    labels: np.ndarray       # (E,) cluster id per expert
+    exemplars: np.ndarray    # (E,) exemplar expert per expert
+    n_clusters: int
+    redundancy: float        # 1 - n_clusters / E
+
+
+def expert_signatures(router_probs: jnp.ndarray) -> jnp.ndarray:
+    """(T, E) -> (E, T') normalized co-activation signatures (T' <= 4096)."""
+    p = jnp.asarray(router_probs, jnp.float32)
+    t = min(p.shape[0], 4096)
+    sig = p[:t].T                                   # (E, T')
+    sig = sig / (jnp.linalg.norm(sig, axis=1, keepdims=True) + 1e-9)
+    return sig
+
+
+def cluster_experts(
+    router_probs: jnp.ndarray, *, iterations: int = 100,
+    damping: float = 0.7, preference_scale: float = 1.0,
+) -> ExpertClusters:
+    sig = expert_signatures(router_probs)
+    e = sig.shape[0]
+    s = pairwise_similarity(sig)
+    off = np.asarray(s)[~np.eye(e, dtype=bool)]
+    pref = float(np.median(off)) * preference_scale
+    s = set_preferences(s, pref)
+    res = affinity_propagation(s, iterations=iterations, damping=damping)
+    ex = np.asarray(canonicalize(res.exemplars))
+    uniq, labels = np.unique(ex, return_inverse=True)
+    return ExpertClusters(labels.astype(np.int32), ex, len(uniq),
+                          1.0 - len(uniq) / e)

@@ -1,0 +1,69 @@
+"""Preference (self-similarity) initialization strategies.
+
+Paper §2: preferences are the diagonal of S; s_jj = 0 means "strongly wants
+to be an exemplar", s_jj -> -inf means "never". The paper empirically favors
+*random negative* preferences (U[-1e6, 0] in the image experiments); Frey &
+Dueck's classic choice is the median of the off-diagonal similarities, and
+Givoni et al. use (min+max)/2. All three are provided.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Strategy = Literal["median", "range_mid", "random", "constant"]
+
+
+def median_preference(s: jnp.ndarray) -> jnp.ndarray:
+    """Median of off-diagonal similarities (Frey & Dueck default)."""
+    n = s.shape[-1]
+    mask = ~jnp.eye(n, dtype=bool)
+    vals = jnp.sort(jnp.where(mask, s, jnp.nan).ravel())
+    k = n * n - n  # count of off-diagonal entries
+    lo = vals[(k - 1) // 2]
+    hi = vals[k // 2]
+    return jnp.full((n,), 0.5 * (lo + hi), s.dtype)
+
+
+def range_mid_preference(s: jnp.ndarray) -> jnp.ndarray:
+    """(min + max)/2 of off-diagonal similarities (Givoni et al.)."""
+    n = s.shape[-1]
+    mask = ~jnp.eye(n, dtype=bool)
+    off = jnp.where(mask, s, -jnp.inf)
+    smax = jnp.max(off)
+    off = jnp.where(mask, s, jnp.inf)
+    smin = jnp.min(off)
+    return jnp.full((n,), 0.5 * (smin + smax), s.dtype)
+
+
+def random_preference(
+    key: jax.Array, n: int, low: float = -1.0e6, high: float = 0.0,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Random negative preferences U[low, high] — the paper's choice (§4.1)."""
+    return jax.random.uniform(key, (n,), dtype=dtype, minval=low, maxval=high)
+
+
+def make_preferences(
+    s: jnp.ndarray,
+    strategy: Strategy = "median",
+    *,
+    key: jax.Array | None = None,
+    constant: float = 0.0,
+    low: float = -1.0e6,
+    high: float = 0.0,
+) -> jnp.ndarray:
+    n = s.shape[-1]
+    if strategy == "median":
+        return median_preference(s)
+    if strategy == "range_mid":
+        return range_mid_preference(s)
+    if strategy == "random":
+        if key is None:
+            raise ValueError("random preferences need a PRNG key")
+        return random_preference(key, n, low, high, s.dtype)
+    if strategy == "constant":
+        return jnp.full((n,), constant, s.dtype)
+    raise ValueError(f"unknown preference strategy: {strategy}")

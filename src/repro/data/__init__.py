@@ -1,0 +1,7 @@
+from repro.data.synth import aggregation_like, gaussian_blobs, two_moons
+from repro.data.images import buttons_image, mandrill_like_image, image_to_points
+
+__all__ = [
+    "aggregation_like", "gaussian_blobs", "two_moons",
+    "buttons_image", "mandrill_like_image", "image_to_points",
+]

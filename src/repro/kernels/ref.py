@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel sweep tests (tests/test_kernels.py)
+assert against, and double as the CPU fallback path in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_top2(v: jnp.ndarray):
+    """Per-row (max, argmax, second-max) of a (N, M) matrix.
+
+    Ties: argmax is the first occurrence; for duplicated maxima the second
+    max equals the max (only the argmax position is excluded).
+    """
+    m1 = jnp.max(v, axis=-1)
+    i1 = jnp.argmax(v, axis=-1).astype(jnp.int32)
+    masked = jnp.where(
+        jax.nn.one_hot(i1, v.shape[-1], dtype=bool), -jnp.inf, v)
+    m2 = jnp.max(masked, axis=-1)
+    return m1, i1, m2
+
+
+def responsibility(
+    s: jnp.ndarray, a: jnp.ndarray, tau: jnp.ndarray,
+    r_old: jnp.ndarray, lam: float,
+) -> jnp.ndarray:
+    """Damped Eq 2.1: lam*r_old + (1-lam)*(s + min(tau, -max_{k!=j}(a+s)))."""
+    v = (a + s).astype(jnp.float32)
+    m1, i1, m2 = row_top2(v)
+    j = jnp.arange(s.shape[-1])
+    row_max = jnp.where(j[None, :] == i1[:, None], m2[:, None], m1[:, None])
+    new = s.astype(jnp.float32) + jnp.minimum(
+        tau.astype(jnp.float32)[:, None], -row_max)
+    return (lam * r_old.astype(jnp.float32) + (1.0 - lam) * new).astype(s.dtype)
+
+
+def col_stats(r: jnp.ndarray):
+    """(col_sum, diag): col_sum[j] = sum_{k != j} max(0, r_kj); diag[j]=r_jj."""
+    n = r.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    rp = jnp.where(eye, 0.0, jnp.maximum(r.astype(jnp.float32), 0.0))
+    return jnp.sum(rp, axis=0), jnp.diagonal(r).astype(jnp.float32)
+
+
+def availability(
+    r: jnp.ndarray, c: jnp.ndarray, phi: jnp.ndarray,
+    a_old: jnp.ndarray, lam: float,
+) -> jnp.ndarray:
+    """Damped Eq 2.2/2.3 from clamped column sums."""
+    n = r.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    col, rdiag = col_stats(r)
+    rp = jnp.where(eye, 0.0, jnp.maximum(r.astype(jnp.float32), 0.0))
+    base = (c + phi).astype(jnp.float32)[None, :]
+    a_off = jnp.minimum(0.0, base + rdiag[None, :] + col[None, :] - rp)
+    a_diag = base + col[None, :]
+    new = jnp.where(eye, a_diag, a_off)
+    return (lam * a_old.astype(jnp.float32) + (1.0 - lam) * new).astype(r.dtype)
+
+
+def neg_sqeuclidean(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """s_ij = -||x_i - y_j||^2 (f32 accumulation)."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    xx = jnp.sum(xf * xf, axis=-1)[:, None]
+    yy = jnp.sum(yf * yf, axis=-1)[None, :]
+    return (-(jnp.maximum(xx + yy - 2.0 * (xf @ yf.T), 0.0))).astype(x.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Oracle for the flash kernel: plain softmax attention.
+    q: (BH, Sq, D); k, v: (BH, Sk, D)."""
+    import math
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2:]
+        rows = jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        s = jnp.where(rows >= cols, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows produce NaN in softmax; zero them (kernel emits 0)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,149 @@
+"""Post-compile HLO analysis: collective-traffic extraction for the
+roofline (cost_analysis has FLOPs/bytes but no collective accounting).
+
+We parse the optimized HLO text for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, read their result
+shapes and replica groups, and convert to *per-chip wire bytes* with ring
+equivalents:
+
+    all-gather:        out * (G-1)/G          (each chip receives the rest)
+    all-reduce:        2 * out * (G-1)/G      (reduce-scatter + all-gather)
+    reduce-scatter:    in  * (G-1)/G ~= out * (G-1)
+    all-to-all:        out * (G-1)/G
+    collective-permute: out                   (one hop)
+
+Ops inside while loops (scan-over-layers) are multiplied by the trip count
+parsed from the while condition when available, else by a caller-provided
+default (n_layer units).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+class CollectiveStats(NamedTuple):
+    wire_bytes_per_chip: float
+    by_type: dict
+    op_count: int
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[2,4096,512]' or '(f32[2], f32[2])' -> payload bytes."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return world
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "all-reduce":
+        return 2 * (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)          # result is already the 1/G shard
+    if kind == "all-to-all":
+        return (g - 1) / g
+    return 1.0                       # collective-permute
+
+
+def _while_trip_counts(hlo: str) -> list[tuple[int, int, int]]:
+    """Return (start_line, end_line, trip_count) for while bodies.
+
+    XLA annotates known trip counts; as a fallback we look for
+    constants compared in the condition."""
+    out = []
+    for m in re.finditer(r'known_trip_count=\{?"?n"?[:=](\d+)', hlo):
+        out.append(int(m.group(1)))
+    return out
+
+
+def analyze_collectives(hlo_text: str, world: int,
+                        default_trip: int = 1) -> CollectiveStats:
+    """Sum per-chip wire bytes over collectives in the optimized module.
+
+    Scan bodies appear as separate computations whose name contains
+    "while" / "body"; ops there are scaled by ``default_trip`` unless a
+    known_trip_count annotation is present.
+    """
+    trips = _while_trip_counts(hlo_text)
+    trip = trips[0] if trips else default_trip
+
+    by_type: dict[str, float] = defaultdict(float)
+    count = 0
+    in_body = False
+    for line in hlo_text.splitlines():
+        header = re.match(r"^\s*%?(\S+)\s*\([^)]*\)\s*->", line)
+        if line.strip().startswith(("%", "ENTRY")) and "{" in line and "=" not in line:
+            name = line.strip().split()[0].lstrip("%")
+            in_body = ("while" in name or "body" in name or "cond" in name
+                       or "region" in name)
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        payload = _shape_bytes(type_str)
+        g = _group_size(line, world)
+        scale = trip if in_body else 1
+        by_type[kind] += payload * _wire_factor(kind, g) * scale
+        count += 1
+    total = sum(by_type.values())
+    return CollectiveStats(total, dict(by_type), count)
+
+
+# ------------------------------------------------------------- roofline
+V5E = {
+    "flops_bf16": 197e12,      # per chip
+    "hbm_bw": 819e9,           # B/s per chip
+    "ici_bw": 50e9,            # B/s per link (per-chip effective)
+}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   chips: int, hw: dict = V5E) -> dict:
+    """Seconds per step for each roofline term, whole-step, per chip.
+
+    ``flops``/``hbm_bytes`` are TOTALS over the module execution for ONE
+    device program (XLA cost_analysis is per-device under SPMD)."""
+    t_compute = flops / hw["flops_bf16"]
+    t_memory = hbm_bytes / hw["hbm_bw"]
+    t_coll = wire_bytes / hw["ici_bw"]
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,402 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while bodies ONCE, which makes it
+useless for scan-over-layers models (a 94-layer qwen3 reports one layer).
+This walker parses the optimized module, builds the call graph, and
+multiplies every while body by its ``known_trip_count`` backend config:
+
+  flops: dot ops = 2 * |result| * K (contraction size from the lhs shape
+         and lhs_contracting_dims); everything else ~1 flop per output
+         element (negligible next to the dots, counted for completeness).
+  bytes: per materializing op (fusion boundary, dot, copy, collectives,
+         slices, gathers...), operand + result buffer bytes — a post-fusion
+         HBM-traffic proxy.
+  wire : collective payloads converted to per-chip wire bytes with ring
+         equivalents (same factors as hlo_analysis).
+
+All figures are per-device (the SPMD module is one device's program).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "while",
+    "conditional", "call", "custom-call", "add-dependency", "domain",
+    "opt-barrier", "optimization-barrier",
+}
+
+
+def _array_shapes(type_str: str):
+    """All (dtype, dims) arrays in a type string (handles tuples)."""
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d]
+        out.append((dtype, shape))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(sh) if sh else _DTYPE_BYTES[dt]
+               for dt, sh in _array_shapes(type_str))
+
+
+def _type_elems(type_str: str) -> int:
+    return sum(math.prod(sh) if sh else 1 for _, sh in _array_shapes(type_str))
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    symtab: dict = field(default_factory=dict)   # op name -> type_str
+
+
+def _split_type_opcode(rhs: str):
+    """'(s32[], f32[2]{0}) while(%t), cond=...' -> (type, opcode, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                type_str = rhs[: i + 1]
+                rest = rhs[i + 1:].strip()
+                break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        type_str = rhs[:sp]
+        rest = rhs[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    # balanced operand group
+    start = rest.find("(")
+    depth = 0
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            operands_str = rest[start + 1: i]
+            attrs = rest[i + 1:]
+            break
+    else:
+        operands_str = ""
+        attrs = ""
+    operands = [t.strip() for t in _split_top_commas(operands_str)]
+    return type_str, opcode, operands, attrs
+
+
+def _split_top_commas(s: str):
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [x for x in (t.strip() for t in out) if x]
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if (stripped.endswith("{") and "->" in stripped
+                and not stripped.startswith(" ")):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        parsed = _split_type_opcode(rhs)
+        if parsed is None:
+            continue
+        type_str, opcode, operands, attrs = parsed
+        op = Op(name, type_str, opcode, operands, line)
+        cur.ops.append(op)
+        cur.symtab[name] = type_str
+    return comps
+
+
+def _operand_type(tok: str, symtab: dict) -> str | None:
+    """Operand token: either 'f32[2,3]{1,0} %name' or '%name'."""
+    tok = tok.strip()
+    if tok.startswith("%"):
+        return symtab.get(tok[1:])
+    m = re.match(r"((?:\([^)]*\))|(?:\S+))\s+%([\w.\-]+)", tok)
+    if m:
+        return m.group(1)
+    if tok.startswith("("):
+        return tok
+    return symtab.get(tok.lstrip("%"))
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    result_elems = _type_elems(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    lhs_type = _operand_type(op.operands[0], symtab) if op.operands else None
+    if not m or lhs_type is None:
+        return 2.0 * result_elems  # conservative fallback
+    arrays = _array_shapes(lhs_type)
+    if not arrays:
+        return 2.0 * result_elems
+    lhs_shape = arrays[0][1]
+    k = 1
+    for d in m.group(1).split(","):
+        if d and int(d) < len(lhs_shape):
+            k *= lhs_shape[int(d)]
+    return 2.0 * result_elems * k
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return world
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    return {"all-gather": (g - 1) / g,
+            "all-reduce": 2 * (g - 1) / g,
+            "reduce-scatter": float(g - 1),
+            "all-to-all": (g - 1) / g,
+            "collective-permute": 1.0}[kind]
+
+
+def _op_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """HBM-traffic proxy for one materializing op.
+
+    In-place patterns are special-cased: a dynamic-update-slice (standalone
+    or inside a fusion) only moves the UPDATE slice (read + write), not the
+    full aliased buffer — critical for KV caches and scan stashes where the
+    buffer is GBs but the update is MBs.
+    """
+    def operand_types():
+        out = []
+        for tok in op.operands:
+            t = _operand_type(tok, comp.symtab)
+            if t:
+                out.append(t)
+        return out
+
+    if op.opcode == "dynamic-update-slice":
+        ops_t = operand_types()
+        upd = _type_bytes(ops_t[1]) if len(ops_t) > 1 else 0
+        return 2.0 * upd
+    if op.opcode in ("dynamic-slice", "slice"):
+        return 2.0 * _type_bytes(op.type_str)
+
+    result_b = _type_bytes(op.type_str)
+    total = result_b
+    overrides: dict[int, float] = {}
+    if op.opcode == "fusion":
+        called = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if called and called.group(1) in comps:
+            inner = comps[called.group(1)]
+            # parameter name -> call-site operand position
+            param_idx = {}
+            for iop in inner.ops:
+                if iop.opcode == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", iop.line)
+                    if m:
+                        param_idx[iop.name] = int(m.group(1))
+            def pname(tok):
+                m = re.search(r"%([\w.\-]+)\s*$", tok.strip())
+                return m.group(1) if m else tok.strip().lstrip("%")
+            for iop in inner.ops:
+                if iop.opcode in ("dynamic-slice", "slice") and iop.operands:
+                    src = pname(iop.operands[0])
+                    if src in param_idx:
+                        # fused gather from a stacked buffer: traffic is
+                        # the slice, not the buffer
+                        overrides[param_idx[src]] = _type_bytes(iop.type_str)
+                elif iop.opcode == "dynamic-update-slice" and \
+                        len(iop.operands) > 1:
+                    buf = pname(iop.operands[0])
+                    upd_t = _operand_type(iop.operands[1], inner.symtab)
+                    ub = _type_bytes(upd_t) if upd_t else 0.0
+                    if buf in param_idx:
+                        overrides[param_idx[buf]] = ub      # read slice
+                    total = total - result_b + ub           # write slice
+                    result_b = ub
+    for pos, tok in enumerate(op.operands):
+        t = _operand_type(tok, comp.symtab)
+        if t is None:
+            continue
+        total += overrides.get(pos, _type_bytes(t))
+    return total
+
+
+class HLOCost(NamedTuple):
+    flops: float
+    bytes: float
+    wire_bytes: float
+    wire_by_type: dict
+    collective_ops: int
+    top_bytes: list = []
+    top_flops: list = []
+
+
+def analyze(text: str, world: int, breakdown: bool = False) -> HLOCost:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line.strip()[len("ENTRY"):].strip() )
+            m2 = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m2:
+                entry = m2.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation named like main
+        entry = next((n for n in comps if "main" in n), None)
+    if entry is None:
+        return HLOCost(0.0, 0.0, 0.0, {}, 0)
+
+    wire_by_type: dict[str, float] = {}
+    coll_count = 0
+    seen_stack: set[str] = set()
+    byte_contrib: list = []
+    flop_contrib: list = []
+
+    def comp_cost(name: str, mult: float,
+                  count_bytes: bool = True) -> tuple[float, float]:
+        nonlocal coll_count
+        if name not in comps or name in seen_stack:
+            return 0.0, 0.0
+        seen_stack.add(name)
+        comp = comps[name]
+        flops = 0.0
+        nbytes = 0.0
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                tm = _TRIP_RE.search(op.line)
+                trip = int(tm.group(1)) if tm else 1
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                if body:
+                    f, b = comp_cost(body.group(1), mult * trip)
+                    flops += f
+                    nbytes += b
+                if cond:
+                    f, b = comp_cost(cond.group(1), mult * trip)
+                    flops += f
+                    nbytes += b
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}",
+                                      op.line)
+                if branches:
+                    costs = [comp_cost(b.strip().lstrip("%"), mult)
+                             for b in branches[0].split(",")]
+                    if costs:
+                        f, b = max(costs)
+                        flops += f
+                        nbytes += b
+                continue
+            if oc in ("call", "fusion", "map", "reduce", "sort",
+                      "reduce-window", "scatter", "select-and-scatter"):
+                called = re.search(
+                    r"(?:calls|to_apply|called_computations)=%?([\w.\-]+)",
+                    op.line)
+                if called and oc in ("call", "fusion", "map"):
+                    # fusion internals are register/VMEM-local: flops only
+                    f, _ = comp_cost(called.group(1), mult,
+                                     count_bytes=False)
+                    flops += f
+                else:
+                    flops += _type_elems(op.type_str) * mult
+            elif oc == "dot":
+                df = _dot_flops(op, comp.symtab) * mult
+                flops += df
+                if breakdown:
+                    flop_contrib.append((df, name, op.name, op.type_str[:70]))
+            elif oc == "convolution":
+                flops += 2.0 * _type_elems(op.type_str) * mult  # coarse
+            elif (oc in COLLECTIVES or any(
+                    op.opcode.startswith(c) for c in COLLECTIVES)):
+                if oc.endswith("-done"):
+                    continue  # async pair: counted at -start
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                payload = _type_bytes(op.type_str)
+                g = _group_size(op.line, world)
+                wire = payload * _wire_factor(kind, g) * mult
+                wire_by_type[kind] = wire_by_type.get(kind, 0.0) + wire
+                coll_count += 1
+            else:
+                flops += _type_elems(op.type_str) * mult * 0.0
+
+            if count_bytes and oc not in _SKIP_BYTES:
+                ob = _op_bytes(op, comp, comps) * mult
+                nbytes += ob
+                if breakdown and ob > 0:
+                    byte_contrib.append((ob, name, op.opcode, op.name,
+                                         op.type_str[:70]))
+        seen_stack.discard(name)
+        return flops, nbytes
+
+    flops, nbytes = comp_cost(entry, 1.0)
+    return HLOCost(flops, nbytes, sum(wire_by_type.values()),
+                   wire_by_type, coll_count,
+                   sorted(byte_contrib, reverse=True)[:40],
+                   sorted(flop_contrib, reverse=True)[:40])

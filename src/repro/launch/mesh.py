@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; the multi-pod mesh adds a leading 2-pod
+    axis (512 chips). Axes: ("pod",) "data", "model"."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    ndev = math.prod(shape)
+    devices = jax.devices()[:ndev]
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_worker_mesh(workers: int | None = None, axis_name: str = "workers"):
+    """1-D mesh over all local devices for the MR-HAP clustering runtime."""
+    n = workers or len(jax.devices())
+    return jax.make_mesh((n,), (axis_name,), axis_types=(AxisType.Auto,))

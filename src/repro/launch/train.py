@@ -1,0 +1,95 @@
+"""Training driver: ``python -m repro.launch.train --arch tinyllama-1.1b
+--smoke --steps 50``.
+
+On real hardware this runs the full config on the production mesh; in this
+container ``--smoke`` selects the reduced config on the local device(s).
+Wires together: config -> model -> train loop -> checkpointing -> fault
+policy — the end-to-end path examples/lm_train.py demonstrates.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import Prefetcher, synthetic_token_stream
+from repro.models import Mode, model_init, pick_mode
+from repro.runtime.fault import FaultPolicy, run_with_restarts
+from repro.train.loop import TrainState, init_train_state, make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", choices=["topk"], default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args(argv)
+
+    name = args.arch + ("-smoke" if args.smoke else "")
+    cfg = get_arch(name)
+    mode = pick_mode(cfg, "train", args.seq)
+    step_fn = jax.jit(make_train_step(
+        cfg, mode, microbatches=args.microbatches, compress=args.compress,
+        lr_kwargs={"peak": args.lr, "warmup": max(args.steps // 10, 1),
+                   "total": args.steps}))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    def restore() -> tuple[int, TrainState]:
+        params, _ = model_init(jax.random.PRNGKey(0), cfg)
+        state = init_train_state(params)
+        if mgr is not None:
+            hit = mgr.restore_latest(state)
+            if hit is not None:
+                step, state = hit
+                state = jax.tree.map(jnp.asarray, state)
+                print(f"[train] restored step {step}")
+                return step, state
+        return 0, state
+
+    def run(start_state):
+        start, state = start_state
+        stream = Prefetcher(synthetic_token_stream(
+            cfg.vocab, args.batch, args.seq, seed=start))
+        t0 = time.time()
+        for i in range(start, args.steps):
+            batch = {"tokens": jnp.asarray(next(stream))}
+            if cfg.family == "vlm":
+                batch["img_embeds"] = jnp.zeros(
+                    (args.batch, cfg.img_tokens, cfg.d_model), jnp.float32)
+            if cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.enc_seq, cfg.d_model), jnp.float32)
+            state, metrics = step_fn(state, batch)
+            if mgr is not None and (i + 1) % args.ckpt_every == 0:
+                mgr.save(i + 1, state)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"[train] step {i} loss={float(metrics['loss']):.4f} "
+                      f"ce={float(metrics['ce']):.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+        if mgr is not None:
+            mgr.save(args.steps, state)
+            mgr.wait()
+        return state
+
+    run_with_restarts(lambda s=None: run(restore()), lambda: None,
+                      FaultPolicy(checkpoint_every=args.ckpt_every))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,9 @@
+from repro.models.api import (
+    input_sharding, input_specs, make_inputs, model_apply, model_init,
+    model_state_init, model_state_specs, pick_mode,
+)
+from repro.models.blocks import Mode
+
+__all__ = ["input_sharding", "input_specs", "make_inputs", "model_apply",
+           "model_init", "model_state_init", "model_state_specs",
+           "pick_mode", "Mode"]

@@ -1,0 +1,119 @@
+"""Family dispatcher: one (init, apply, state) API over all 10 archs.
+
+Inputs dict per family (all ShapeDtypeStruct-able for the dry run):
+  decoder LMs : tokens (B, S) int32
+  audio       : tokens (B, S) + frames (B, enc_seq, d_model) f32 (stub)
+  vlm         : tokens (B, S - img_tokens) + img_embeds (B, img_tokens, d)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.blocks import Mode
+
+
+def pick_mode(cfg: ArchConfig, shape_kind: str, seq: int) -> Mode:
+    """Blockwise (online-softmax) attention for long-sequence non-decode
+    work: bounds live attention memory to O(S*chunk) (32k prefill would
+    not fit dense). Perf iteration 2 (EXPERIMENTS §Perf) tried blockwise
+    at S=4096 and REFUTED the memory-term win: without a fused flash
+    kernel (Pallas, TPU-only) the tiles round-trip HBM anyway and the
+    online-softmax carries add traffic (qwen2.5 train mem 41s -> 58s), so
+    the threshold stays above 4k."""
+    impl = "blockwise" if seq > 8192 and shape_kind != "decode" else "dense"
+    return Mode(kind=shape_kind, attn_impl=impl)
+
+
+def model_init(key, cfg: ArchConfig):
+    if cfg.family == "audio":
+        return encdec.encdec_init(key, cfg)
+    return lm.lm_init(key, cfg)
+
+
+def model_apply(params, cfg: ArchConfig, inputs: dict, mode: Mode,
+                states=None):
+    """Returns (logits, new_states, aux)."""
+    tokens = inputs["tokens"]
+    b, s_tok = tokens.shape
+    if cfg.family == "audio":
+        positions = inputs.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s_tok)[None], (b, s_tok))
+        return encdec.encdec_apply(
+            params, cfg, tokens, positions, mode,
+            frames=inputs.get("frames"), state=states)
+    prefix = inputs.get("img_embeds")
+    s_total = s_tok + (prefix.shape[1] if prefix is not None else 0)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s_total)[None], (b, s_total))
+    return lm.lm_apply(params, cfg, tokens, positions, mode,
+                       states=states, prefix_embeds=prefix)
+
+
+def model_state_init(cfg: ArchConfig, batch: int, buf: int,
+                     layout: str = "stacked"):
+    if cfg.family == "audio":
+        return encdec.init_encdec_state(cfg, batch, buf)
+    return lm.init_lm_state(cfg, batch, buf, layout=layout)
+
+
+def model_state_specs(cfg: ArchConfig, data_axes=("pod", "data"),
+                      layout: str = "stacked"):
+    if cfg.family == "audio":
+        return encdec.encdec_state_specs(cfg, data_axes)
+    return lm.lm_state_specs(cfg, data_axes, layout=layout)
+
+
+def make_inputs(cfg: ArchConfig, shape: ShapeConfig, *, as_specs: bool = False,
+                key=None):
+    """Concrete arrays (smoke/examples) or ShapeDtypeStructs (dry run)."""
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    toks_s = s
+    extras = {}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        toks_s = max(s - cfg.img_tokens, 1)
+        extras["img_embeds"] = ((b, cfg.img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio" and shape.kind != "decode":
+        extras["frames"] = ((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    out: dict[str, Any] = {}
+    if as_specs:
+        out["tokens"] = jax.ShapeDtypeStruct((b, toks_s), jnp.int32)
+        for name, (shp, dt) in extras.items():
+            out[name] = jax.ShapeDtypeStruct(shp, dt)
+    else:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        k1, k2 = jax.random.split(key)
+        out["tokens"] = jax.random.randint(k1, (b, toks_s), 0, cfg.vocab,
+                                           jnp.int32)
+        for name, (shp, dt) in extras.items():
+            out[name] = jax.random.normal(k2, shp, dt) * 0.02
+    if shape.kind == "decode":
+        pos = jnp.full((b, 1), shape.seq_len, jnp.int32)
+        out["positions"] = (jax.ShapeDtypeStruct((b, 1), jnp.int32)
+                            if as_specs else pos)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    return make_inputs(cfg, shape, as_specs=True)
+
+
+def input_sharding(cfg: ArchConfig, shape: ShapeConfig,
+                   data_axes=("pod", "data")) -> dict:
+    d = tuple(data_axes)
+    specs = {"tokens": P(d, None)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        specs["img_embeds"] = P(d, None, None)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["frames"] = P(d, None, None)
+    if shape.kind == "decode":
+        specs["positions"] = P(d, None)
+    return specs

@@ -1,0 +1,182 @@
+"""Residual block registry: one (init, apply, state) triple per block kind.
+
+Every block: x -> x + f(norm(x)) [-> x + mlp(norm(x)) where the kind has a
+separate FFN]. ``apply`` returns (x, new_state, aux) so MoE aux losses and
+recurrent/KV state thread uniformly through the layer scan in models/lm.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import xlstm as xl
+from repro.models.layers.attention import (
+    KVCache, attn_apply, attn_init, cache_specs, init_cache,
+)
+from repro.models.layers.common import (
+    COMPUTE_DTYPE, apply_layernorm, apply_rmsnorm, layernorm_init,
+    rmsnorm_init,
+)
+from repro.models.layers.mlp import (
+    gelu_mlp_apply, gelu_mlp_init, swiglu_apply, swiglu_init,
+)
+from repro.models.layers.moe import moe_apply, moe_init
+from repro.models.layers.rglru import (
+    RGLRUState, init_rglru_state, rglru_block_apply, rglru_block_init,
+    rglru_state_specs,
+)
+
+
+class Mode(NamedTuple):
+    kind: str                 # "train" | "prefill" | "decode"
+    attn_impl: str            # "dense" | "blockwise"
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+
+def _norm_fns(cfg: ArchConfig):
+    if cfg.norm == "rms":
+        return rmsnorm_init, apply_rmsnorm
+    return layernorm_init, apply_layernorm
+
+
+def _mlp_fns(cfg: ArchConfig):
+    if cfg.mlp == "swiglu":
+        return swiglu_init, swiglu_apply
+    return gelu_mlp_init, gelu_mlp_apply
+
+
+# ---------------------------------------------------------------- attn
+def attn_block_init(key, cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    mlp_init, _ = _mlp_fns(cfg)
+    k1, k2 = jax.random.split(key)
+    attn, attn_s = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                             cfg.resolved_head_dim, cfg.qkv_bias)
+    mlp, mlp_s = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    n1, n1s = norm_init(cfg.d_model)
+    n2, n2s = norm_init(cfg.d_model)
+    return ({"attn": attn, "mlp": mlp, "norm1": n1, "norm2": n2},
+            {"attn": attn_s, "mlp": mlp_s, "norm1": n1s, "norm2": n2s})
+
+
+def attn_block_apply(p, cfg: ArchConfig, x, positions, state, mode: Mode):
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
+    h, new_state = attn_apply(
+        p["attn"], norm(p["norm1"], x), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+        theta=cfg.rope_theta, window=cfg.window, impl=mode.attn_impl,
+        q_chunk=mode.q_chunk, kv_chunk=mode.kv_chunk, cache=state)
+    x = x + h
+    x = x + mlp(p["mlp"], norm(p["norm2"], x))
+    return x, new_state, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- moe
+def moe_block_init(key, cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    k1, k2 = jax.random.split(key)
+    attn, attn_s = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                             cfg.resolved_head_dim, cfg.qkv_bias)
+    moe, moe_s = moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    n1, n1s = norm_init(cfg.d_model)
+    n2, n2s = norm_init(cfg.d_model)
+    return ({"attn": attn, "moe": moe, "norm1": n1, "norm2": n2},
+            {"attn": attn_s, "moe": moe_s, "norm1": n1s, "norm2": n2s})
+
+
+def moe_block_apply(p, cfg: ArchConfig, x, positions, state, mode: Mode):
+    _, norm = _norm_fns(cfg)
+    h, new_state = attn_apply(
+        p["attn"], norm(p["norm1"], x), positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.resolved_head_dim,
+        theta=cfg.rope_theta, window=cfg.window, impl=mode.attn_impl,
+        q_chunk=mode.q_chunk, kv_chunk=mode.kv_chunk, cache=state)
+    x = x + h
+    out = moe_apply(p["moe"], norm(p["norm2"], x), top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor)
+    return x + out.y, new_state, out.aux_loss
+
+
+# ---------------------------------------------------------------- rec
+def rec_block_init(key, cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    mlp_init, _ = _mlp_fns(cfg)
+    k1, k2 = jax.random.split(key)
+    rec, rec_s = rglru_block_init(k1, cfg.d_model, cfg.resolved_d_rnn)
+    mlp, mlp_s = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    n1, n1s = norm_init(cfg.d_model)
+    n2, n2s = norm_init(cfg.d_model)
+    return ({"rec": rec, "mlp": mlp, "norm1": n1, "norm2": n2},
+            {"rec": rec_s, "mlp": mlp_s, "norm1": n1s, "norm2": n2s})
+
+
+def rec_block_apply(p, cfg: ArchConfig, x, positions, state, mode: Mode):
+    _, norm = _norm_fns(cfg)
+    _, mlp = _mlp_fns(cfg)
+    h, new_state = rglru_block_apply(p["rec"], norm(p["norm1"], x), state)
+    x = x + h
+    x = x + mlp(p["mlp"], norm(p["norm2"], x))
+    return x, new_state, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- xLSTM
+def mlstm_block_init(key, cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    blk, blk_s = xl.mlstm_block_init(key, cfg.d_model, cfg.n_heads)
+    n1, n1s = norm_init(cfg.d_model)
+    return {"cell": blk, "norm1": n1}, {"cell": blk_s, "norm1": n1s}
+
+
+def mlstm_block_apply(p, cfg: ArchConfig, x, positions, state, mode: Mode):
+    _, norm = _norm_fns(cfg)
+    h, new_state = xl.mlstm_block_apply(
+        p["cell"], norm(p["norm1"], x), state,
+        n_heads=cfg.n_heads, chunk=cfg.mlstm_chunk)
+    return x + h, new_state, jnp.zeros((), jnp.float32)
+
+
+def slstm_block_init(key, cfg: ArchConfig):
+    norm_init, _ = _norm_fns(cfg)
+    blk, blk_s = xl.slstm_block_init(key, cfg.d_model, cfg.n_heads)
+    n1, n1s = norm_init(cfg.d_model)
+    return {"cell": blk, "norm1": n1}, {"cell": blk_s, "norm1": n1s}
+
+
+def slstm_block_apply(p, cfg: ArchConfig, x, positions, state, mode: Mode):
+    _, norm = _norm_fns(cfg)
+    h, new_state = xl.slstm_block_apply(
+        p["cell"], norm(p["norm1"], x), state, n_heads=cfg.n_heads)
+    return x + h, new_state, jnp.zeros((), jnp.float32)
+
+
+# -------------------------------------------------------------- registry
+BLOCKS: dict[str, tuple[Callable, Callable]] = {
+    "attn": (attn_block_init, attn_block_apply),
+    "moe": (moe_block_init, moe_block_apply),
+    "rec": (rec_block_init, rec_block_apply),
+    "mlstm": (mlstm_block_init, mlstm_block_apply),
+    "slstm": (slstm_block_init, slstm_block_apply),
+}
+
+
+def init_block_state(kind: str, cfg: ArchConfig, batch: int, buf: int):
+    """Decode-time state for one block of ``kind``. ``buf`` = KV buffer len
+    (already window-clamped by the caller)."""
+    dh = cfg.resolved_head_dim
+    if kind in ("attn", "moe"):
+        return init_cache(batch, buf, cfg.n_kv, dh, COMPUTE_DTYPE)
+    if kind == "rec":
+        return init_rglru_state(batch, cfg.resolved_d_rnn, COMPUTE_DTYPE)
+    if kind == "mlstm":
+        return xl.init_mlstm_state(batch, cfg.n_heads,
+                                   cfg.d_model // cfg.n_heads)
+    if kind == "slstm":
+        return xl.init_slstm_state(batch, cfg.n_heads,
+                                   cfg.d_model // cfg.n_heads)
+    raise ValueError(kind)

@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone ([audio] assignment).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed frame embeddings (B, enc_seq, d_model). Positions are
+sinusoidal (computed, not a table, so decoder shapes beyond whisper's
+native 448 tokens stay well-defined for the assigned 4k/32k cells — noted
+in DESIGN §5). Decoder layers: causal self-attention (KV cache) +
+cross-attention over encoder states (K/V cached at prefill) + GELU MLP,
+pre-LayerNorm, biased projections — whisper's layout.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding import maybe_shard
+from repro.models.blocks import Mode
+from repro.models.layers.attention import (
+    KVCache, _mask, _sdpa, attn_apply, attn_init, cache_specs, init_cache,
+)
+from repro.models.layers.common import (
+    COMPUTE_DTYPE, Params, apply_dense, apply_embedding, apply_layernorm,
+    embedding_init, layernorm_init, stacked_init, unembed,
+)
+from repro.models.layers.mlp import gelu_mlp_apply, gelu_mlp_init
+
+
+class EncDecState(NamedTuple):
+    self_cache: Any        # stacked KVCache over decoder layers
+    cross_k: jnp.ndarray   # (L, B, enc_seq, K, Dh)
+    cross_v: jnp.ndarray   # (L, B, enc_seq, K, Dh)
+
+
+def sinusoid(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(B, S) -> (B, S, d) sinusoidal embeddings."""
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+# -------------------------------------------------------------------- init
+def _enc_layer_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    attn, attn_s = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                             cfg.resolved_head_dim, qkv_bias=True)
+    mlp, mlp_s = gelu_mlp_init(k2, cfg.d_model, cfg.d_ff)
+    n1, n1s = layernorm_init(cfg.d_model)
+    n2, n2s = layernorm_init(cfg.d_model)
+    return ({"attn": attn, "mlp": mlp, "norm1": n1, "norm2": n2},
+            {"attn": attn_s, "mlp": mlp_s, "norm1": n1s, "norm2": n2s})
+
+
+def _dec_layer_init(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    self_a, self_s = attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                               cfg.resolved_head_dim, qkv_bias=True)
+    cross_a, cross_s = attn_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                 cfg.resolved_head_dim, qkv_bias=True)
+    mlp, mlp_s = gelu_mlp_init(k3, cfg.d_model, cfg.d_ff)
+    norms = {f"norm{i}": layernorm_init(cfg.d_model)[0] for i in (1, 2, 3)}
+    norm_s = {f"norm{i}": layernorm_init(cfg.d_model)[1] for i in (1, 2, 3)}
+    return ({"self": self_a, "cross": cross_a, "mlp": mlp, **norms},
+            {"self": self_s, "cross": cross_s, "mlp": mlp_s, **norm_s})
+
+
+def encdec_init(key, cfg: ArchConfig) -> tuple[Params, Params]:
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_u, enc_us = stacked_init(
+        lambda k: _enc_layer_init(k, cfg), ke, cfg.enc_layers)
+    dec_u, dec_us = stacked_init(
+        lambda k: _dec_layer_init(k, cfg), kd, cfg.n_layers)
+    embed, embed_s = embedding_init(kemb, cfg.vocab, cfg.d_model)
+    enc_n, enc_ns = layernorm_init(cfg.d_model)
+    dec_n, dec_ns = layernorm_init(cfg.d_model)
+    return ({"embed": embed, "enc_units": enc_u, "dec_units": dec_u,
+             "enc_norm": enc_n, "dec_norm": dec_n},
+            {"embed": embed_s, "enc_units": enc_us, "dec_units": dec_us,
+             "enc_norm": enc_ns, "dec_norm": dec_ns})
+
+
+# ------------------------------------------------------------------ encode
+def encode(params: Params, cfg: ArchConfig, frames: jnp.ndarray,
+           mode: Mode) -> jnp.ndarray:
+    """frames: (B, enc_seq, d_model) stub-frontend embeddings."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = frames.astype(COMPUTE_DTYPE) + sinusoid(pos, cfg.d_model).astype(
+        COMPUTE_DTYPE)
+
+    def body(x, p):
+        h, _ = attn_apply(
+            p["attn"], apply_layernorm(p["norm1"], x), pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.resolved_head_dim, rope=False,
+            impl="dense")
+        # bidirectional: overwrite the causal mask via full visibility
+        x = x + h
+        x = x + gelu_mlp_apply(p["mlp"], apply_layernorm(p["norm2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_units"])
+    return apply_layernorm(params["enc_norm"], x)
+
+
+def _cross_attend(p, cfg: ArchConfig, x, ck, cv):
+    """Full-visibility cross attention; ck/cv: (B, enc_seq, K, Dh)."""
+    b, s, _ = x.shape
+    g = cfg.n_heads // cfg.n_kv
+    dh = cfg.resolved_head_dim
+    q = apply_dense(p["q"], x).reshape(b, s, cfg.n_kv, g, dh)
+    mask = jnp.ones((b, s, ck.shape[1]), bool)
+    out = _sdpa(q, ck, cv, mask).reshape(b, s, cfg.n_heads * dh)
+    return apply_dense(p["o"], out)
+
+
+def _cross_kv(p, cfg: ArchConfig, enc: jnp.ndarray):
+    b, se, _ = enc.shape
+    dh = cfg.resolved_head_dim
+    k = apply_dense(p["k"], enc).reshape(b, se, cfg.n_kv, dh)
+    v = apply_dense(p["v"], enc).reshape(b, se, cfg.n_kv, dh)
+    return k, v
+
+
+# ------------------------------------------------------------------ decode
+def encdec_apply(
+    params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+    positions: jnp.ndarray, mode: Mode, frames: jnp.ndarray | None = None,
+    state: EncDecState | None = None,
+) -> tuple[jnp.ndarray, EncDecState | None, jnp.ndarray]:
+    """Train/prefill: frames given, state optional (prefill fills it).
+    Decode: state given, frames ignored."""
+    b, s = tokens.shape
+    x = apply_embedding(params["embed"], tokens)
+    x = x + sinusoid(positions, cfg.d_model).astype(x.dtype)
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+
+    have_state = state is not None
+    if frames is not None:
+        enc = encode(params, cfg, frames, mode)
+    else:
+        enc = None
+
+    def body(carry, xs):
+        x = carry
+        p, st, ckv = xs
+        self_cache = st if have_state else None
+        if ckv is not None:
+            ck, cv = ckv
+        else:
+            ck, cv = _cross_kv(p["cross"], cfg, enc)
+        h, self_cache = attn_apply(
+            p["self"], apply_layernorm(p["norm1"], x), positions,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            head_dim=cfg.resolved_head_dim, rope=False,
+            impl=mode.attn_impl, q_chunk=mode.q_chunk,
+            kv_chunk=mode.kv_chunk, cache=self_cache)
+        x = x + h
+        x = x + _cross_attend(p["cross"], cfg,
+                              apply_layernorm(p["norm2"], x), ck, cv)
+        x = x + gelu_mlp_apply(p["mlp"], apply_layernorm(p["norm3"], x))
+        new_st = self_cache if have_state else jnp.zeros(())
+        return x, (new_st, jnp.stack([ck, cv]) if enc is not None else None)
+
+    n_layers = cfg.n_layers
+    if have_state and enc is None:   # pure decode: reuse cached cross K/V
+        xs = (params["dec_units"], state.self_cache,
+              (state.cross_k, state.cross_v))
+    elif have_state:                 # prefill: fill self cache + cross K/V
+        xs = (params["dec_units"], state.self_cache, None)
+    else:                            # train
+        xs = (params["dec_units"],
+              jnp.zeros((n_layers,)), None)
+
+    body_fn = body
+    if mode.kind == "train":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body_fn, x, xs)
+
+    new_state = None
+    if have_state:
+        new_caches, cross = ys
+        if enc is not None and cross is not None:
+            new_state = EncDecState(new_caches, cross[:, 0], cross[:, 1])
+        else:
+            new_state = EncDecState(new_caches, state.cross_k, state.cross_v)
+
+    x = apply_layernorm(params["dec_norm"], x)
+    logits = unembed(params["embed"], x, cfg.vocab)
+    return logits, new_state, jnp.zeros((), jnp.float32)
+
+
+def init_encdec_state(cfg: ArchConfig, batch: int, buf: int) -> EncDecState:
+    dh = cfg.resolved_head_dim
+    one = init_cache(batch, buf, cfg.n_kv, dh, COMPUTE_DTYPE)
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers, *x.shape)), one)
+    zkv = jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv, dh),
+                    COMPUTE_DTYPE)
+    return EncDecState(stacked, zkv, zkv)
+
+
+def encdec_state_specs(cfg: ArchConfig, data_axes=("pod", "data")):
+    d = tuple(data_axes)
+    cs = jax.tree.map(lambda s: P(None, *s), cache_specs(data_axes),
+                      is_leaf=lambda s: isinstance(s, P))
+    kv = P(None, d, "model", None, None)   # sequence-sharded (flash-decode)
+    return EncDecState(cs, kv, kv)

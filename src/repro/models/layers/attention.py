@@ -1,0 +1,228 @@
+"""GQA attention with RoPE: dense, blockwise (long-context), and decode
+paths, plus full or ring-buffer (sliding-window) KV caches.
+
+Blockwise attention is the pure-JAX online-softmax formulation (scan over
+query chunks, inner scan over KV chunks) so that 32k+ prefill compiles with
+O(S * chunk) live memory instead of an O(S^2) logits buffer. A Pallas flash
+kernel would replace the inner loop on real TPU hardware; the dry-run must
+lower on the CPU backend, where non-interpret pallas_call cannot compile
+(DESIGN §2). Causal chunk skipping is *not* performed — the HLO computes the
+full S^2 logits; the roofline accounting (benchmarks/roofline.py) counts
+attention FLOPs the same way so the useful-compute ratio stays honest.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.common import (
+    COMPUTE_DTYPE, Params, Specs, apply_dense, dense_bias_init, dense_init,
+)
+from repro.sharding import maybe_shard
+
+# NOTE (EXPERIMENTS §Perf iter 3, REFUTED): hinting train attention
+# batch-parallel over (pod, data, model) removed the partial-Dh logit
+# all-reduces but the rematerialized backward all-gathered the S^2 logits
+# across the model axis (1.8e14 B/chip) — strictly worse. Head geometries
+# that do not divide the model axis (qwen2.5: 8 KV x 5 groups on 16) keep
+# the partial-Dh contraction; deployment guidance is a TP extent that
+# divides the head count.
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray     # (B, S_buf, K, Dh) — RoPE already applied
+    v: jnp.ndarray     # (B, S_buf, K, Dh)
+    pos: jnp.ndarray   # (B, S_buf) absolute positions, -1 = empty
+    length: jnp.ndarray  # (B,) int32: tokens seen so far PER ROW (slots
+                         # may be at different positions — continuous
+                         # batching, repro.serve.batching)
+
+
+def init_cache(batch: int, buf: int, n_kv: int, head_dim: int,
+               dtype=COMPUTE_DTYPE) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, buf, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, buf, n_kv, head_dim), dtype),
+        pos=jnp.full((batch, buf), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_specs(data_axes=("pod", "data")) -> KVCache:
+    """Flash-decode layout: the cache shards over the SEQUENCE dim on
+    "model" (KV heads are few — 1..8 — and rarely divide the model axis).
+    Decode attention then reduces over the sharded timeline: per-shard
+    logits/softmax partials + a small all-reduce, instead of gathering a
+    multi-GB cache."""
+    d = tuple(data_axes)
+    return KVCache(k=P(d, "model", None, None), v=P(d, "model", None, None),
+                   pos=P(d, "model"), length=P(d))
+
+
+# ---------------------------------------------------------------- rope
+def rotate(x: jnp.ndarray, positions: jnp.ndarray,
+           theta: float = 10000.0) -> jnp.ndarray:
+    """RoPE computed from positions directly (no table: long-context safe).
+    x: (B, S, H, Dh); positions: (B, S)."""
+    dh = x.shape[-1]
+    inv = theta ** (-jnp.arange(0, dh, 2, dtype=jnp.float32) / dh)
+    ang = positions.astype(jnp.float32)[..., None] * inv      # (B, S, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- params
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False) -> tuple[Params, Specs]:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    mk = dense_bias_init if qkv_bias else dense_init
+    extra = {"bspec": P("model")} if qkv_bias else {}
+    q, qs = mk(kq, d_model, n_heads * head_dim, P(None, "model"), **extra)
+    k, ks = mk(kk, d_model, n_kv * head_dim, P(None, "model"), **extra)
+    v, vs = mk(kv, d_model, n_kv * head_dim, P(None, "model"), **extra)
+    o, os_ = dense_init(ko, n_heads * head_dim, d_model, P("model", None))
+    return ({"q": q, "k": k, "v": v, "o": o},
+            {"q": qs, "k": ks, "v": vs, "o": os_})
+
+
+# ------------------------------------------------------------ dense path
+def _mask(pos_q, pos_k, window, causal=True):
+    """(..., Sq, Sk) boolean visibility: causal + optional sliding window +
+    empty-slot (-1) exclusion."""
+    m = pos_k[..., None, :] >= 0
+    if causal:
+        m &= pos_k[..., None, :] <= pos_q[..., :, None]
+    if window is not None:
+        m &= pos_q[..., :, None] - pos_k[..., None, :] < window
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B, Sq, K, G, Dh); k, v: (B, Sk, K, Dh); mask: (B, Sq, Sk)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def _online_chunk(carry, kv_chunk, q, pos_q, window, scale):
+    """Online-softmax accumulation for one KV chunk.
+    carry: (m, l, acc); kv_chunk: (k, v, pos_k)."""
+    m, l, acc = carry
+    k, v, pos_k = kv_chunk
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _mask(pos_q, pos_k, window)                      # (B, Sq, Sk)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(logits - m_new[..., None])
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p.astype(q.dtype), v).astype(jnp.float32)
+    return (m_new, l_new, acc_new), None
+
+
+def blockwise_attention(q, k, v, pos_q, pos_k, *, window=None,
+                        q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash-style attention: O(Sq*kv_chunk) live memory. Shapes as _sdpa."""
+    b, sq, kh, g, dh = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    kc = k.reshape(b, nk, kv_chunk, kh, dh).swapaxes(0, 1)
+    vc = v.reshape(b, nk, kv_chunk, kh, dh).swapaxes(0, 1)
+    pkc = pos_k.reshape(b, nk, kv_chunk).swapaxes(0, 1)
+
+    def per_q_chunk(qc, pqc):
+        m0 = jnp.full((b, kh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, dh), jnp.float32)
+        step = functools.partial(_online_chunk, q=qc, pos_q=pqc,
+                                 window=window, scale=scale)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pkc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)                          # (B, K, G, qc, Dh)
+
+    qs = q.reshape(b, nq, q_chunk, kh, g, dh).swapaxes(0, 1)
+    pqs = pos_q.reshape(b, nq, q_chunk).swapaxes(0, 1)
+    outs = jax.lax.map(lambda args: per_q_chunk(*args), (qs, pqs))
+    out = outs.swapaxes(0, 1).transpose(0, 1, 4, 2, 3, 5)   # (B,nq,qc,K,G,Dh)
+    return out.reshape(b, sq, kh, g, dh)
+
+
+# ------------------------------------------------------------- public API
+def attn_apply(
+    p: Params, x: jnp.ndarray, positions: jnp.ndarray, *,
+    n_heads: int, n_kv: int, head_dim: int, theta: float = 10000.0,
+    window: int | None = None, impl: str = "dense",
+    q_chunk: int = 1024, kv_chunk: int = 1024,
+    cache: KVCache | None = None, rope: bool = True, causal: bool = True,
+) -> tuple[jnp.ndarray, KVCache | None]:
+    """Returns (out (B, S, D), updated cache or None).
+
+    Training/prefill: pass cache=None (prefill returning a cache is handled
+    by the serving engine via ``fill_cache``). Decode: pass S=1 slices and a
+    cache; keys are rotated before caching so cached K never re-rotates.
+    """
+    b, s, _ = x.shape
+    g = n_heads // n_kv
+    q = apply_dense(p["q"], x).reshape(b, s, n_kv, g, head_dim)
+    k = apply_dense(p["k"], x).reshape(b, s, n_kv, head_dim)
+    v = apply_dense(p["v"], x).reshape(b, s, n_kv, head_dim)
+    if rope:
+        q = rotate(q.reshape(b, s, n_kv * g, head_dim), positions, theta
+                   ).reshape(b, s, n_kv, g, head_dim)
+        k = rotate(k, positions, theta)
+
+    pos_q = jnp.broadcast_to(positions, (b, s)).astype(jnp.int32)
+    if cache is not None and s == 1:
+        # ---- decode: write one token per row into its ring slot (rows
+        # may sit at different lengths under continuous batching)
+        buf = cache.k.shape[1]
+        idxs = cache.length % buf                          # (B,)
+        row_write = jax.vmap(
+            lambda dst, x, i: jax.lax.dynamic_update_slice_in_dim(
+                dst, x, i, axis=0))
+        ck = row_write(cache.k, k, idxs)
+        cv = row_write(cache.v, v, idxs)
+        cpos = row_write(cache.pos, pos_q, idxs)
+        cache = KVCache(ck, cv, cpos, cache.length + 1)
+        out = _sdpa(q, cache.k, cache.v, _mask(pos_q, cache.pos, window))
+    else:
+        # ---- train / prefill: attend within the sequence
+        if impl == "blockwise":
+            out = blockwise_attention(q, k, v, pos_q, pos_q, window=window,
+                                      q_chunk=q_chunk, kv_chunk=kv_chunk)
+        else:
+            out = _sdpa(q, k, v, _mask(pos_q, pos_q, window, causal))
+        if cache is not None:
+            # prefill: persist the last min(S, buf) tokens (window tail).
+            # The ring is position-keyed (token at position p -> slot p%buf)
+            # so the decode write pointer length%buf always hits the oldest
+            # slot; the tail block is rolled into place accordingly.
+            buf = cache.k.shape[1]
+            tail = min(s, buf)
+            shift = (s - tail) % buf
+            put = lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                dst, jnp.roll(src[:, s - tail:], shift, axis=1), 0, axis=1)
+            cache = KVCache(put(cache.k, k), put(cache.v, v),
+                            put(cache.pos, pos_q),
+                            cache.length + jnp.asarray(s, jnp.int32))
+    out = out.reshape(b, s, n_heads * head_dim)
+    return apply_dense(p["o"], out), cache

@@ -1,0 +1,137 @@
+"""Shared building blocks: params are plain dict pytrees; every init
+function returns ``(params, specs)`` where ``specs`` mirrors the tree with
+``PartitionSpec`` leaves (logical sharding is co-declared with the shape so
+the two can never drift).
+
+Mesh logical axes used throughout (mapped in repro.sharding.partitioning):
+  "data"   — batch                                  -> ("pod", "data") axes
+  "model"  — heads / ffn / experts / vocab          -> "model" axis
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = dict
+Specs = dict
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def dense_init(key, d_in: int, d_out: int, spec: P,
+               scale: float | None = None) -> tuple[Params, Specs]:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    w = jax.random.normal(key, (d_in, d_out), PARAM_DTYPE) * scale
+    return {"w": w}, {"w": spec}
+
+
+def dense_bias_init(key, d_in: int, d_out: int, spec: P, bspec: P,
+                    scale: float | None = None) -> tuple[Params, Specs]:
+    p, s = dense_init(key, d_in, d_out, spec, scale)
+    p["b"] = jnp.zeros((d_out,), PARAM_DTYPE)
+    s["b"] = bspec
+    return p, s
+
+
+def apply_dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(d: int) -> tuple[Params, Specs]:
+    return {"scale": jnp.ones((d,), PARAM_DTYPE)}, {"scale": P()}
+
+
+def apply_rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> tuple[Params, Specs]:
+    return ({"scale": jnp.ones((d,), PARAM_DTYPE),
+             "bias": jnp.zeros((d,), PARAM_DTYPE)},
+            {"scale": P(), "bias": P()})
+
+
+def apply_layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int,
+                   pad_to: int = 128) -> tuple[Params, Specs]:
+    """Vocab rows padded to a multiple of ``pad_to`` so the "model"-sharded
+    embedding divides any mesh extent; pad rows are zero and masked in
+    ``unembed``."""
+    vpad = ((vocab + pad_to - 1) // pad_to) * pad_to
+    w = jax.random.normal(key, (vpad, d), PARAM_DTYPE) * 0.02
+    w = w.at[vocab:].set(0.0)
+    return {"embedding": w}, {"embedding": P("model", None)}
+
+
+def apply_embedding(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(COMPUTE_DTYPE)
+
+
+def unembed(p: Params, x: jnp.ndarray, vocab: int | None = None
+            ) -> jnp.ndarray:
+    """Tied unembedding -> f32 logits (vocab sharded on "model"). Padded
+    vocab rows are masked to -1e30 so argmax/logsumexp ignore them."""
+    logits = (x @ p["embedding"].astype(x.dtype).T).astype(jnp.float32)
+    vpad = logits.shape[-1]
+    if vocab is not None and vocab < vpad:
+        col = jnp.arange(vpad)
+        logits = jnp.where(col < vocab, logits, -1e30)
+    return logits
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, max_seq: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    ang = jnp.outer(t, inv)                       # (S, head_dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) absolute token positions."""
+    c = cos[positions][:, :, None, :]             # (B, S, 1, Dh/2)
+    s = sin[positions][:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- misc utils
+def stack_layer_params(per_layer: list[Params]) -> Params:
+    """[{...}, {...}] -> {...} with a leading layer axis (for lax.scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def stacked_init(init_fn, key, n_layers: int) -> tuple[Params, Specs]:
+    """vmap an init over a leading layer axis; specs gain a None dim."""
+    keys = jax.random.split(key, n_layers)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, spec = init_fn(keys[0])
+    specs = jax.tree.map(
+        lambda s: P(None, *s), spec,
+        is_leaf=lambda s: isinstance(s, P))
+    return params, specs
+
+
+def count_params(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper/ViT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.common import (
+    Params, Specs, apply_dense, dense_bias_init, dense_init,
+)
+
+
+def swiglu_init(key, d_model: int, d_ff: int) -> tuple[Params, Specs]:
+    kg, ku, kd = jax.random.split(key, 3)
+    gate, gs = dense_init(kg, d_model, d_ff, P(None, "model"))
+    up, us = dense_init(ku, d_model, d_ff, P(None, "model"))
+    down, ds = dense_init(kd, d_ff, d_model, P("model", None))
+    return ({"gate": gate, "up": up, "down": down},
+            {"gate": gs, "up": us, "down": ds})
+
+
+def swiglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return apply_dense(
+        p["down"], jax.nn.silu(apply_dense(p["gate"], x))
+        * apply_dense(p["up"], x))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int) -> tuple[Params, Specs]:
+    k1, k2 = jax.random.split(key)
+    up, us = dense_bias_init(k1, d_model, d_ff, P(None, "model"), P("model"))
+    down, ds = dense_bias_init(k2, d_ff, d_model, P("model", None), P())
+    return {"up": up, "down": down}, {"up": us, "down": ds}
+
+
+def gelu_mlp_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return apply_dense(p["down"], jax.nn.gelu(apply_dense(p["up"], x)))

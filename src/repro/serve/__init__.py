@@ -1,0 +1,7 @@
+from repro.serve.batching import ContinuousBatchingEngine, insert_sequence
+from repro.serve.engine import ServeEngine, make_prefill_step, make_decode_step
+from repro.serve.kvcache import exemplar_compress_cache
+
+__all__ = ["ContinuousBatchingEngine", "insert_sequence", "ServeEngine",
+           "make_prefill_step", "make_decode_step",
+           "exemplar_compress_cache"]

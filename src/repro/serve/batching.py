@@ -1,0 +1,141 @@
+"""Continuous batching: a slot-based scheduler over the pure decode step.
+
+vLLM-style serving layered on the functional engine: a fixed batch of B
+slots decodes in lockstep; finished sequences free their slot immediately
+and a queued request is prefILLED INTO the live batch (single-sequence
+prefill, then tree-surgery insert of its cache row) without stalling the
+other slots. Per-row cache lengths (models/layers/attention.py) are what
+make rows at different positions coexist.
+
+Pure-array core: ``insert_sequence`` and the step logic have no Python
+side effects beyond the scheduler's own bookkeeping, so every device op is
+a jitted function reused across requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import Mode, model_apply, model_state_init
+from repro.serve.engine import make_decode_step, make_prefill_step
+
+
+def insert_sequence(batch_states: Any, one_states: Any, slot: int) -> Any:
+    """Write a single-sequence state tree (batch dim 1) into ``slot`` of a
+    batch state tree (batch dim B). Works for any layout (leaves match)."""
+    return jax.tree.map(lambda full, one: full.at[slot].set(one[0]),
+                        batch_states, one_states)
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int | None = None
+    length: int = 0            # absolute position of next token
+    budget: int = 0            # remaining tokens to generate
+    out: list = dataclasses.field(default_factory=list)
+
+
+class ContinuousBatchingEngine:
+    """Greedy continuous batching over ``slots`` concurrent sequences."""
+
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None):
+        assert cfg.family not in ("audio",), "LM families only"
+        self.cfg = cfg
+        self.params = params
+        self.slots = [_Slot() for _ in range(slots)]
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.queue: deque = deque()
+        self.states = model_state_init(cfg, slots, max_len, layout="list")
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._insert = jax.jit(insert_sequence, static_argnums=(2,))
+        self._prefill_cache: dict[int, Any] = {}
+        self._next_id = 0
+        self.finished: dict[int, np.ndarray] = {}
+
+    # ------------------------------------------------------------ admin
+    def submit(self, tokens: np.ndarray, max_new: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(tokens, np.int32), max_new))
+        return rid
+
+    def _admit(self, slot_idx: int) -> None:
+        rid, toks, max_new = self.queue.popleft()
+        s = len(toks)
+        plen = s
+        key = plen
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                make_prefill_step(self.cfg, plen))
+        one = model_state_init(self.cfg, 1, self.max_len, layout="list")
+        logits, one = self._prefill_cache[key](
+            self.params,
+            {"tokens": jnp.asarray(toks)[None],
+             "positions": jnp.arange(plen)[None]},
+            one)
+        self.states = self._insert(self.states, one, slot_idx)
+        slot = self.slots[slot_idx]
+        slot.request_id = rid
+        slot.length = s
+        slot.budget = max_new
+        first = int(jnp.argmax(logits[0]))
+        slot.out = [first]
+        slot.budget -= 1
+        self._check_finish(slot_idx, first)
+
+    def _check_finish(self, slot_idx: int, token: int) -> None:
+        slot = self.slots[slot_idx]
+        if slot.budget <= 0 or (self.eos_id is not None
+                                and token == self.eos_id):
+            self.finished[slot.request_id] = np.asarray(slot.out, np.int32)
+            self.slots[slot_idx] = _Slot()
+
+    # ------------------------------------------------------------- step
+    def _fill_free_slots(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is None and self.queue:
+                self._admit(i)
+
+    def step(self) -> None:
+        """One decode step across all active slots."""
+        self._fill_free_slots()
+        active = [i for i, s in enumerate(self.slots)
+                  if s.request_id is not None]
+        if not active:
+            return
+        b = len(self.slots)
+        toks = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b, 1), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.request_id is not None:
+                toks[i, 0] = slot.out[-1]
+                pos[i, 0] = slot.length
+                slot.length += 1
+        logits, self.states = self._decode(
+            self.params, {"tokens": jnp.asarray(toks),
+                          "positions": jnp.asarray(pos)}, self.states)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in list(active):
+            slot = self.slots[i]
+            tok = int(nxt[i])
+            slot.out.append(tok)
+            slot.budget -= 1
+            self._check_finish(i, tok)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> dict:
+        steps = 0
+        while (self.queue or any(s.request_id is not None
+                                 for s in self.slots)):
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("continuous batching did not drain")
+        return self.finished

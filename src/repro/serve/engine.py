@@ -1,0 +1,87 @@
+"""Serving engine: jitted prefill + decode steps and a batched driver.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the dry-run
+lowers for the "prefill_*" / "decode_*" / "long_*" cells; ``ServeEngine``
+drives them for the runnable examples (greedy or temperature sampling,
+static batch — continuous batching is a scheduler concern layered above
+these pure steps)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Mode, model_apply, model_state_init, pick_mode
+
+
+def make_prefill_step(cfg: ArchConfig, seq_len: int):
+    mode = pick_mode(cfg, "prefill", seq_len)
+
+    def prefill(params, inputs, states):
+        logits, states, _ = model_apply(params, cfg, inputs, mode,
+                                        states=states)
+        return logits[:, -1], states
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    mode = Mode(kind="decode", attn_impl="dense")
+
+    def decode(params, inputs, states):
+        logits, states, _ = model_apply(params, cfg, inputs, mode,
+                                        states=states)
+        return logits[:, -1], states
+    return decode
+
+
+class ServeEngine:
+    """Static-batch engine: prefill once, then step-decode."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 4096):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def generate(
+        self, prompt_tokens: jnp.ndarray, *, steps: int = 32,
+        temperature: float = 0.0, key=None, extras: dict | None = None,
+    ) -> jnp.ndarray:
+        """prompt_tokens (B, S) -> (B, steps) generated ids."""
+        cfg = self.cfg
+        b, s = prompt_tokens.shape
+        prefix = cfg.img_tokens if cfg.family == "vlm" else 0
+        total = s + prefix
+        # list layout: per-layer donated cache buffers, unrolled decode
+        # (4.1x lower decode HBM traffic — EXPERIMENTS §Perf iteration 4)
+        layout = "list" if cfg.family != "audio" else "stacked"
+        states = model_state_init(cfg, b, self.max_len, layout=layout)
+        prefill = jax.jit(make_prefill_step(cfg, total))
+        inputs = {"tokens": prompt_tokens,
+                  "positions": jnp.broadcast_to(
+                      jnp.arange(total)[None], (b, total))}
+        if extras:
+            inputs.update(extras)
+        logits, states = prefill(self.params, inputs, states)
+
+        out = []
+        pos = total
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(steps):
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits / temperature, -1)
+            else:
+                nxt = jnp.argmax(logits, -1)
+            nxt = nxt.astype(jnp.int32)[:, None]
+            out.append(nxt)
+            logits, states = self._decode(
+                self.params,
+                {"tokens": nxt,
+                 "positions": jnp.full((b, 1), pos, jnp.int32)},
+                states)
+            pos += 1
+        return jnp.concatenate(out, axis=1)

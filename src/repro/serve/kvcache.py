@@ -1,0 +1,86 @@
+"""Exemplar-compressed KV cache — the paper's technique composed with the
+serving stack (DESIGN §4.3, beyond-paper demonstration).
+
+Affinity Propagation runs over the cached KEY vectors of a window and
+selects exemplars; the cache is rewritten to hold only exemplar entries,
+with each exemplar's VALUE replaced by the mean of its cluster members
+(so the compressed attention output approximates attending to the full
+window, exemplar keys summarize the score landscape). AP's "no preset k"
+property is exactly what a cache compressor wants: how many KV entries a
+window needs is data-dependent; the preference knob trades memory for
+fidelity.
+
+This runs on-host or jitted per window; O(W^2) in the window size W (not
+sequence length) — W is 256–1024 in practice.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affinity import affinity_propagation
+from repro.core.similarity import pairwise_similarity, set_preferences
+from repro.models.layers.attention import KVCache
+
+
+class CompressionStats(NamedTuple):
+    kept: jnp.ndarray        # number of exemplar slots
+    ratio: jnp.ndarray       # kept / window
+
+
+def exemplar_compress_window(
+    k: jnp.ndarray, v: jnp.ndarray, *, preference: float,
+    iterations: int = 50, damping: float = 0.7,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """k, v: (W, K_heads, Dh) -> (k', v', keep_mask (W,)).
+
+    Exemplar rows keep their key; their value becomes the member mean.
+    Non-exemplar rows are masked (keep_mask False) — the caller rewrites
+    positions to -1 so attention skips them (static shapes preserved).
+    """
+    w = k.shape[0]
+    feats = k.reshape(w, -1).astype(jnp.float32)
+    s = pairwise_similarity(feats)
+    s = set_preferences(s, preference)
+    res = affinity_propagation(s, iterations=iterations, damping=damping)
+    e = res.exemplars                                  # (W,) exemplar of each
+    keep = jnp.zeros((w,), bool).at[e].set(True)
+    # member-mean values per exemplar
+    hot = jax.nn.one_hot(e, w, dtype=v.dtype)          # (W, W) member->exemplar
+    counts = jnp.maximum(hot.sum(0), 1.0)              # (W,)
+    vflat = v.reshape(w, -1)
+    vmean = (hot.T @ vflat) / counts[:, None]
+    v_new = jnp.where(keep[:, None], vmean, 0.0).reshape(v.shape)
+    k_new = jnp.where(keep[:, None], k.reshape(w, -1), 0.0).reshape(k.shape)
+    return k_new, v_new, keep
+
+
+def exemplar_compress_cache(
+    cache: KVCache, *, window: int = 256, preference: float = -50.0,
+    iterations: int = 50, damping: float = 0.7,
+) -> tuple[KVCache, CompressionStats]:
+    """Compress the oldest ``window`` entries of a cache in place.
+
+    Newest tokens are left exact (recency matters); the compressed region
+    keeps exemplar KVs and masks the rest via pos = -1.
+    """
+    b, buf, kh, dh = cache.k.shape
+    window = min(window, buf)
+
+    def per_seq(k, v, pos):
+        k_w, v_w = k[:window], v[:window]
+        k_new, v_new, keep = exemplar_compress_window(
+            k_w.astype(jnp.float32), v_w.astype(jnp.float32),
+            preference=preference, iterations=iterations, damping=damping)
+        pos_new = jnp.where(keep, pos[:window], -1)
+        k_out = k.at[:window].set(k_new.astype(k.dtype))
+        v_out = v.at[:window].set(v_new.astype(v.dtype))
+        p_out = pos.at[:window].set(pos_new)
+        return k_out, v_out, p_out, jnp.sum(keep)
+
+    k2, v2, p2, kept = jax.vmap(per_seq)(cache.k, cache.v, cache.pos)
+    stats = CompressionStats(kept=kept,
+                             ratio=kept.astype(jnp.float32) / window)
+    return KVCache(k2, v2, p2, cache.length), stats

@@ -1,0 +1,77 @@
+"""Partitioning helpers: logical specs are written against the *largest*
+mesh (("pod", "data", "model")); ``filter_spec`` projects them onto whatever
+mesh is actually in context (single-pod meshes have no "pod" axis; smoke
+tests run mesh-less and all constraints become no-ops)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def filter_spec(spec: P, axis_names) -> P:
+    """Drop mesh axes that do not exist on the current mesh."""
+    names = set(axis_names)
+
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        kept = tuple(a for a in entry if a in names)
+        return kept if kept else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def maybe_shard(x, spec: P):
+    """with_sharding_constraint iff a mesh is in context (jax.set_mesh).
+    Shape-safe: axes the array cannot divide are dropped per dim."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = filter_spec(spec, mesh.axis_names)
+    spec = _divisible_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec tree -> NamedSharding tree, axis-filtered for ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_spec(s, mesh.axis_names)),
+        spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def _divisible_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the array cannot divide (e.g. batch=1 on a
+    32-way data axis, 8 KV heads on a 16-way model axis): per dim, keep the
+    longest prefix of axes whose product divides the dim."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept, prod = [], 1
+        for a in axes:
+            ext = mesh.shape[a]
+            if shape[i] % (prod * ext) == 0:
+                kept.append(a)
+                prod *= ext
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    return P(*out)
+
+
+def shape_safe_shardings(mesh: Mesh, sds_tree: Any, spec_tree: Any) -> Any:
+    """NamedShardings whose specs are both axis-filtered and
+    shape-divisibility-safe for the given ShapeDtypeStruct tree."""
+    def one(sds, s):
+        spec = filter_spec(s, mesh.axis_names)
+        spec = _divisible_spec(spec, sds.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, sds_tree, spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,6 @@
+from repro.train.loop import TrainState, make_train_step, train_state_specs
+from repro.train.optimizer import adamw_init, adamw_update
+from repro.train.schedule import cosine_warmup
+
+__all__ = ["TrainState", "make_train_step", "train_state_specs",
+           "adamw_init", "adamw_update", "cosine_warmup"]

@@ -1,0 +1,48 @@
+"""AdamW with global-norm clipping. Optimizer state mirrors the param tree
+(and therefore the param sharding specs — m/v shard identically)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params: Any) -> AdamWState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return AdamWState(mu=z, nu=jax.tree.map(jnp.zeros_like, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    grads: Any, state: AdamWState, params: Any, lr: jnp.ndarray, *,
+    b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1, clip_norm: float = 1.0,
+) -> tuple[Any, AdamWState]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return (p - lr * (step + weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(mu, nu, count)

@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step: jnp.ndarray, *, peak: float = 3e-4,
+                  warmup: int = 100, total: int = 10_000,
+                  floor: float = 0.1) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = peak * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)

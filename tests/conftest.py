@@ -1,0 +1,17 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Distributed equivalence tests spawn subprocesses that set the flag
+# themselves (tests/helpers/*).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

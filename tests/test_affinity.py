@@ -1,0 +1,97 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    affinity_propagation, canonicalize, net_similarity, pairwise_similarity,
+    purity, set_preferences,
+)
+from repro.core.affinity import (
+    availability_update, masked_top2, responsibility_update,
+)
+from repro.core.preferences import median_preference
+from repro.data import gaussian_blobs
+
+
+def _sim(x):
+    s = pairwise_similarity(jnp.asarray(x))
+    return set_preferences(s, median_preference(s))
+
+
+def test_masked_top2_matches_manual(rng):
+    v = jnp.asarray(rng.standard_normal((10, 17)).astype(np.float32))
+    m1, i1, m2 = masked_top2(v)
+    vn = np.asarray(v)
+    np.testing.assert_allclose(np.asarray(m1), vn.max(1), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), vn.argmax(1))
+    for r in range(10):
+        row = vn[r].copy()
+        row[row.argmax()] = -np.inf
+        assert abs(float(m2[r]) - row.max()) < 1e-6
+
+
+def test_responsibility_manual_small():
+    # 3-point example computed by hand:  r(i,j) = s(i,j) - max_{k!=j}(a+s)
+    s = jnp.asarray([[0.0, -1.0, -4.0],
+                     [-1.0, 0.0, -2.0],
+                     [-4.0, -2.0, 0.0]], jnp.float32)
+    a = jnp.zeros((3, 3), jnp.float32)
+    r = np.asarray(responsibility_update(s, a))
+    # row 0: v = [0, -1, -4]; max=0 (j=0), second=-1
+    np.testing.assert_allclose(r[0], [0 - (-1), -1 - 0, -4 - 0], atol=1e-6)
+
+
+def test_availability_manual_small():
+    r = jnp.asarray([[0.5, -1.0, 2.0],
+                     [1.0, -0.5, -3.0],
+                     [-2.0, 3.0, 0.25]], jnp.float32)
+    a = np.asarray(availability_update(r))
+    # a(j,j) = sum_{k!=j} max(0, r(k,j))
+    np.testing.assert_allclose(np.diag(a), [1.0, 3.0, 2.0], atol=1e-6)
+    # a(0,1) = min(0, r(1,1) + sum_{k not in {0,1}} max(0, r(k,1)))
+    assert abs(a[0, 1] - min(0.0, -0.5 + 3.0)) < 1e-6
+    assert abs(a[1, 0] - min(0.0, 0.5 + 0.0)) < 1e-6
+
+
+def test_ap_clusters_blobs():
+    x, y = gaussian_blobs(n=150, k=4, seed=1, spread=0.4)
+    res = affinity_propagation(_sim(x), iterations=120, damping=0.7)
+    labels = np.asarray(canonicalize(res.exemplars))
+    assert purity(labels, y) > 0.95
+    assert 3 <= int(res.n_clusters) <= 12
+
+
+def test_ap_exemplars_are_valid_indices():
+    x, _ = gaussian_blobs(n=60, k=3, seed=2)
+    res = affinity_propagation(_sim(x), iterations=60, damping=0.6)
+    e = np.asarray(res.exemplars)
+    assert np.all((0 <= e) & (e < 60))
+
+
+def test_net_similarity_better_than_random():
+    x, _ = gaussian_blobs(n=80, k=4, seed=3)
+    s = _sim(x)
+    res = affinity_propagation(s, iterations=80, damping=0.7)
+    rng = np.random.default_rng(0)
+    rand_e = jnp.asarray(rng.integers(0, 80, 80))
+    assert float(net_similarity(s, res.exemplars)) > float(
+        net_similarity(s, rand_e))
+
+
+def test_canonicalize_idempotent():
+    x, _ = gaussian_blobs(n=50, k=3, seed=4)
+    res = affinity_propagation(_sim(x), iterations=60, damping=0.6)
+    once = canonicalize(res.exemplars)
+    twice = canonicalize(once)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_property_damping_keeps_finite(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((24, 2)).astype(np.float32)
+    res = affinity_propagation(_sim(x), iterations=40, damping=0.9)
+    assert np.all(np.isfinite(np.asarray(res.r)))
+    assert np.all(np.isfinite(np.asarray(res.a)))

@@ -1,0 +1,38 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import canopy_centers, hierarchical_kmeans, kmeans
+from repro.baselines.canopy import auto_thresholds
+from repro.core.metrics import purity
+from repro.data import aggregation_like, gaussian_blobs
+
+
+def test_kmeans_blobs():
+    x, y = gaussian_blobs(n=200, k=4, seed=0, spread=0.3)
+    res = kmeans(jnp.asarray(x), 4, iterations=30,
+                 key=jax.random.PRNGKey(7))
+    assert purity(np.asarray(res.labels), y) > 0.9  # random init sensitivity
+
+
+def test_kmeans_inertia_decreases_with_k():
+    x, _ = gaussian_blobs(n=150, k=5, seed=1)
+    i2 = float(kmeans(jnp.asarray(x), 2, iterations=20).inertia)
+    i8 = float(kmeans(jnp.asarray(x), 8, iterations=20).inertia)
+    assert i8 < i2
+
+
+def test_canopy_discovers_reasonable_centers():
+    x, _ = gaussian_blobs(n=300, k=5, seed=2, spread=0.3, box=20.0)
+    t1, t2 = auto_thresholds(x)
+    centers = canopy_centers(x, t1, t2)
+    assert 2 <= len(centers) <= 60
+
+
+def test_hkmeans_hierarchy_shape():
+    x, y = aggregation_like()
+    hk = hierarchical_kmeans(x, levels=3, branch=3)
+    assert hk.labels.shape == (3, len(x))
+    # finer levels have at least as many clusters
+    assert hk.n_clusters[0] >= hk.n_clusters[1] >= hk.n_clusters[2]
+    assert purity(hk.labels[0], y) > 0.9

@@ -1,0 +1,55 @@
+"""§3.1 complexity validation: per-iteration work is O(L * N^2), the
+distributed split divides it by W, and stats-mode communication is O(L*N).
+Measured via jaxpr op-output sizes (a backend-independent work proxy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hap import hap_init, hap_sweep_parallel
+from repro.core.mrhap import comm_bytes_per_iteration
+
+
+def _work_proxy(n: int, levels: int = 2) -> int:
+    """Sum of output elements over all equations in one sweep."""
+    s3 = jnp.zeros((levels, n, n))
+
+    def sweep(state):
+        return hap_sweep_parallel(state, 0.5, 0.0, "off",
+                                  jnp.asarray(False))
+
+    jaxpr = jax.make_jaxpr(sweep)(hap_init(s3))
+    total = 0
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            if hasattr(var.aval, "size"):
+                total += var.aval.size
+    return total
+
+
+def test_sweep_work_scales_quadratically():
+    w64, w128, w256 = _work_proxy(64), _work_proxy(128), _work_proxy(256)
+    # doubling N must ~4x the work (allow fusion slack)
+    assert 3.0 < w128 / w64 < 5.0
+    assert 3.0 < w256 / w128 < 5.0
+
+
+def test_sweep_work_scales_linearly_in_levels():
+    a = _work_proxy(96, levels=2)
+    b = _work_proxy(96, levels=4)
+    assert 1.7 < b / a < 2.4
+
+
+def test_comm_scaling_with_workers():
+    n, levels = 4096, 3
+    # transpose-mode volume per worker falls ~1/W (the paper's shuffle)
+    per_worker_8 = comm_bytes_per_iteration(n, levels, 8, "transpose") / 8
+    per_worker_64 = comm_bytes_per_iteration(n, levels, 64, "transpose") / 64
+    assert per_worker_64 < per_worker_8
+    # stats mode is N-linear: quadrupling N quadruples bytes
+    s1 = comm_bytes_per_iteration(n, levels, 16, "stats")
+    s4 = comm_bytes_per_iteration(4 * n, levels, 16, "stats")
+    assert 3.5 < s4 / s1 < 4.5
+    # transpose mode is N^2: quadrupling N -> ~16x
+    t1 = comm_bytes_per_iteration(n, levels, 16, "transpose")
+    t4 = comm_bytes_per_iteration(4 * n, levels, 16, "transpose")
+    assert t4 / t1 > 10

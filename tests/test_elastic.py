@@ -1,0 +1,22 @@
+"""Elastic scaling end-to-end: train on 4 devices, lose half, restore the
+checkpoint onto 2 and continue — losses must match the uninterrupted run
+(subprocess so the forced device count stays out of this session)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "elastic_check.py")
+
+
+@pytest.mark.slow
+def test_elastic_restart_preserves_training():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, HELPER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -1,0 +1,49 @@
+"""Flash-attention kernel sweep vs oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+
+CASES = [
+    (4, 128, 128, 64, True, 64),
+    (2, 100, 100, 32, True, 64),     # non-aligned seq
+    (2, 256, 256, 128, False, 128),  # non-causal
+    (3, 64, 192, 32, True, 32),      # rectangular (cross-ish)
+    (1, 512, 512, 64, True, 128),
+]
+
+
+@pytest.mark.parametrize("bh,sq,sk,d,causal,blk", CASES)
+def test_flash_sweep_f32(bh, sq, sk, d, causal, blk, rng):
+    q = jnp.asarray(rng.standard_normal((bh, sq, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((bh, sk, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((bh, sk, d)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=blk,
+                                 block_k=blk, interpret=True)
+    want = ref.flash_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_bf16(dtype, rng):
+    q = jnp.asarray(rng.standard_normal((2, 128, 64))).astype(dtype)
+    k = jnp.asarray(rng.standard_normal((2, 128, 64))).astype(dtype)
+    v = jnp.asarray(rng.standard_normal((2, 128, 64))).astype(dtype)
+    out = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    want = ref.flash_attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_flash_ops_wrapper(rng):
+    q = jnp.asarray(rng.standard_normal((2, 64, 32)).astype(np.float32))
+    a = ops.flash_attention(q, q, q, block=32)
+    b = ops.flash_attention(q, q, q, use_ref=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-5, rtol=2e-5)

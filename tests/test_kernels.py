@@ -1,0 +1,125 @@
+"""Per-kernel sweeps: shapes x dtypes x block sizes vs the pure-jnp oracle
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.availability import availability_pallas
+from repro.kernels.responsibility import responsibility_pallas
+from repro.kernels.similarity import similarity_pallas
+
+SHAPES = [(32, 32), (96, 64), (128, 128), (130, 70), (256, 256), (300, 200)]
+BLOCKS = [32, 128]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("block", BLOCKS)
+def test_responsibility_sweep(shape, block, rng):
+    n, m = shape
+    s = jnp.asarray(-rng.random((n, m)).astype(np.float32) * 10)
+    a = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    r_old = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    tau = jnp.asarray(rng.standard_normal((n,)).astype(np.float32))
+    out = responsibility_pallas(s, a, tau, r_old, 0.5, block_i=block,
+                                block_j=block, interpret=True)
+    want = ref.responsibility(s, a, tau, r_old, 0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+AV_SHAPES = [(32, 32), (128, 128), (130, 130), (256, 256), (70, 70)]
+
+
+@pytest.mark.parametrize("shape", AV_SHAPES)  # availability is N x N
+@pytest.mark.parametrize("block", BLOCKS)
+def test_availability_sweep(shape, block, rng):
+    n, m = shape
+    r = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    a_old = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    c = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    phi = jnp.asarray(rng.standard_normal((m,)).astype(np.float32))
+    out = availability_pallas(r, c, phi, a_old, 0.5, block_i=block,
+                              block_j=block, interpret=True)
+    want = ref.availability(r, c, phi, a_old, 0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 64, 3), (100, 40, 7), (128, 128, 130),
+                                   (70, 130, 16)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_similarity_sweep(n, m, d, dtype, rng):
+    x = jnp.asarray(rng.standard_normal((n, d))).astype(dtype)
+    y = jnp.asarray(rng.standard_normal((m, d))).astype(dtype)
+    out = similarity_pallas(x, y, block_i=64, block_j=64, interpret=True)
+    want = ref.neg_sqeuclidean(x, y)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+def test_responsibility_tie_handling():
+    """Duplicate row maxima: second max equals max; argmax = first hit."""
+    s = jnp.zeros((2, 6), jnp.float32)
+    a = jnp.asarray([[5.0, 1.0, 5.0, 0.0, 0.0, 0.0],
+                     [1.0, 2.0, 3.0, 3.0, 0.0, 0.0]], jnp.float32)
+    tau = jnp.full((2,), jnp.inf)
+    r_old = jnp.zeros((2, 6), jnp.float32)
+    out = responsibility_pallas(s, a, tau, r_old, 0.0, block_i=2, block_j=2,
+                                interpret=True)
+    want = ref.responsibility(s, a, tau, r_old, 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6)
+
+
+def test_ops_wrappers_dispatch(rng):
+    n = 48
+    s = jnp.asarray(-rng.random((n, n)).astype(np.float32))
+    a = jnp.zeros((n, n), jnp.float32)
+    tau = jnp.full((n,), jnp.inf)
+    r1 = ops.responsibility(s, a, tau, jnp.zeros_like(s), lam=0.5, block=32)
+    r2 = ops.responsibility(s, a, tau, jnp.zeros_like(s), lam=0.5,
+                            use_ref=True)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), atol=1e-5)
+
+
+def test_kernel_iteration_matches_flat_ap(rng):
+    """One kernel-built iteration == one reference AP iteration."""
+    from repro.core.affinity import availability_update, responsibility_update
+    n = 64
+    s = jnp.asarray(-rng.random((n, n)).astype(np.float32) * 5)
+    r = jnp.zeros((n, n), jnp.float32)
+    a = jnp.zeros((n, n), jnp.float32)
+    tau = jnp.full((n,), jnp.inf)
+    z = jnp.zeros((n,), jnp.float32)
+    lam = 0.5
+    rk, ak = ops.hap_iteration_kernels(s, r, a, tau, z, z, lam=lam, block=32)
+    r_ref = lam * r + (1 - lam) * responsibility_update(s, a)
+    a_ref = lam * a + (1 - lam) * availability_update(r_ref)
+    np.testing.assert_allclose(np.asarray(rk), np.asarray(r_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ak), np.asarray(a_ref), atol=1e-5)
+
+
+def test_kernel_ap_matches_core_ap(rng):
+    """Flat AP built from the Pallas kernels == core AP, end to end."""
+    import jax
+    from repro.core.affinity import affinity_propagation
+    from repro.core.preferences import median_preference
+    from repro.core.similarity import pairwise_similarity, set_preferences
+    from repro.data import gaussian_blobs
+    x, _ = gaussian_blobs(n=96, k=3, seed=11)
+    s = pairwise_similarity(jax.numpy.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    want = affinity_propagation(s, iterations=40, damping=0.5)
+    e, r, a = ops.affinity_propagation_kernels(s, iterations=40, lam=0.5,
+                                               block=32)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(want.r),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(e), np.asarray(want.exemplars))

@@ -1,0 +1,48 @@
+import numpy as np
+
+from repro.core.expert_affinity import cluster_experts
+from repro.data.pipeline import (
+    Prefetcher, hap_curate_batch, synthetic_token_stream,
+)
+
+
+def test_token_stream_shapes_and_determinism():
+    a = next(synthetic_token_stream(100, 4, 16, seed=3))
+    b = next(synthetic_token_stream(100, 4, 16, seed=3))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 16) and a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_prefetcher_yields_in_order():
+    it = iter([1, 2, 3])
+    pf = Prefetcher(it, depth=2)
+    assert [next(pf), next(pf), next(pf)] == [1, 2, 3]
+    pf.close()
+
+
+def test_hap_curation_dedups_near_duplicates():
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((6, 8)).astype(np.float32) * 4
+    # 4 near-copies of each base sample
+    batch = np.repeat(base, 4, axis=0) + 0.02 * rng.standard_normal((24, 8))
+    keep = hap_curate_batch(batch)
+    assert 3 <= len(keep) <= 12  # ~6 exemplars << 24 samples
+
+
+def test_expert_affinity_finds_redundant_experts():
+    """Experts 0/1 and 2/3 get identical routing signatures — HAP should
+    cluster them together without being told k."""
+    rng = np.random.default_rng(1)
+    t, e = 512, 8
+    probs = rng.random((t, e)).astype(np.float32) * 0.05
+    hot = rng.integers(0, 4, t)
+    for i, h in enumerate(hot):
+        probs[i, 2 * (h // 2)] += 0.5      # pairs (0,1), (2,3) co-activate
+        probs[i, 2 * (h // 2) + 1] += 0.5
+    probs /= probs.sum(1, keepdims=True)
+    res = cluster_experts(probs)
+    assert res.n_clusters < e
+    assert res.labels[0] == res.labels[1]
+    assert res.labels[2] == res.labels[3]
+    assert res.redundancy > 0.2

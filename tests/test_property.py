@@ -1,0 +1,92 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    affinity_propagation, pad_similarity, pairwise_similarity, run_hap,
+    set_preferences, stack_levels,
+)
+from repro.core.preferences import median_preference
+from repro.kernels import ref
+from repro.runtime.compression import topk_compress
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _sim(x):
+    s = pairwise_similarity(jnp.asarray(x))
+    return set_preferences(s, median_preference(s))
+
+
+@given(n=st.integers(6, 32), seed=st.integers(0, 30))
+def test_ap_translation_invariance(n, seed):
+    """AP depends on pairwise distances only: translating the data must
+    not change the exemplar assignment."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 3)).astype(np.float32)
+    e1 = affinity_propagation(_sim(x), iterations=40, damping=0.6).exemplars
+    e2 = affinity_propagation(_sim(x + 7.5), iterations=40,
+                              damping=0.6).exemplars
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+@given(n=st.integers(6, 24), pad_to=st.integers(2, 12), seed=st.integers(0, 20))
+def test_pad_similarity_inert(n, pad_to, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    s3 = stack_levels(_sim(x), 2)
+    res = run_hap(s3, iterations=20, damping=0.6, order="parallel")
+    s3p, n0 = pad_similarity(s3, pad_to)
+    resp = run_hap(s3p, iterations=20, damping=0.6, order="parallel")
+    assert n0 == n
+    np.testing.assert_array_equal(np.asarray(resp.exemplars[:, :n]),
+                                  np.asarray(res.exemplars))
+
+
+@given(n=st.integers(4, 20), m=st.integers(4, 20), seed=st.integers(0, 30),
+       lam=st.floats(0.0, 0.95))
+def test_responsibility_row_shift_equivariance(n, m, seed, lam):
+    """Adding a per-row constant c_i to `a` shifts the fresh responsibility
+    by exactly -c_i (the row max absorbs it): r2 = r1 - (1-lam)*shift.
+    This equivariance is why MR-HAP ships O(1) row statistics — relative
+    responsibilities within a row are shift-invariant."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(-rng.random((n, m)).astype(np.float32))
+    a = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    tau = jnp.full((n,), jnp.inf)
+    r_old = jnp.zeros((n, m), jnp.float32)
+    shift = jnp.asarray(rng.standard_normal((n, 1)).astype(np.float32))
+    r1 = ref.responsibility(s, a, tau, r_old, lam)
+    r2 = ref.responsibility(s, a + shift, tau, r_old, lam)
+    np.testing.assert_allclose(np.asarray(r2),
+                               np.asarray(r1) - (1 - lam) * np.asarray(shift),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(seed=st.integers(0, 30), ratio=st.floats(0.01, 0.5))
+def test_topk_compress_keeps_largest(seed, ratio):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((257,)).astype(np.float32))
+    out = np.asarray(topk_compress(g, ratio))
+    k = max(1, int(g.size * ratio))
+    kept = np.count_nonzero(out)
+    assert kept >= k  # ties can keep a few more, never fewer
+    # every kept entry is >= every dropped entry in magnitude
+    if kept < g.size:
+        assert np.abs(out[out != 0]).min() >= np.abs(
+            np.asarray(g)[out == 0]).max() - 1e-6
+
+
+@given(n=st.integers(4, 16), seed=st.integers(0, 20))
+def test_exemplars_stable_under_duplicate_points(n, seed):
+    """Duplicating a point must not break finiteness or index validity."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 2)).astype(np.float32)
+    x2 = np.concatenate([x, x[:1]])
+    res = affinity_propagation(_sim(x2), iterations=30, damping=0.7)
+    e = np.asarray(res.exemplars)
+    assert np.all((0 <= e) & (e <= n))
+    assert np.all(np.isfinite(np.asarray(res.r)))

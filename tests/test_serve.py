@@ -1,0 +1,67 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import model_init
+from repro.models.layers.attention import init_cache
+from repro.serve.engine import ServeEngine
+from repro.serve.kvcache import (
+    exemplar_compress_cache, exemplar_compress_window,
+)
+
+
+def test_engine_generates(key):
+    cfg = get_arch("tinyllama-1.1b-smoke")
+    params, _ = model_init(key, cfg)
+    engine = ServeEngine(cfg, params, max_len=64)
+    prompts = jax.random.randint(key, (2, 16), 0, cfg.vocab, jnp.int32)
+    out = engine.generate(prompts, steps=6)
+    assert out.shape == (2, 6)
+    assert np.all((0 <= np.asarray(out)) & (np.asarray(out) < cfg.vocab))
+
+
+def test_greedy_is_deterministic(key):
+    cfg = get_arch("tinyllama-1.1b-smoke")
+    params, _ = model_init(key, cfg)
+    engine = ServeEngine(cfg, params, max_len=48)
+    prompts = jax.random.randint(key, (1, 8), 0, cfg.vocab, jnp.int32)
+    a = np.asarray(engine.generate(prompts, steps=5))
+    b = np.asarray(engine.generate(prompts, steps=5))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_exemplar_window_selects_cluster_structure(key):
+    """Keys drawn from 3 tight clusters: compression should keep ~3
+    exemplars and member-mean values."""
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((3, 8)).astype(np.float32) * 5
+    ks = np.repeat(centers, 16, axis=0) + 0.05 * rng.standard_normal((48, 8))
+    vs = rng.standard_normal((48, 8)).astype(np.float32)
+    k_new, v_new, keep = exemplar_compress_window(
+        jnp.asarray(ks)[:, None, :], jnp.asarray(vs)[:, None, :],
+        preference=-200.0)
+    kept = int(np.sum(np.asarray(keep)))
+    assert 2 <= kept <= 8
+    # kept exemplar keys are unchanged
+    idx = np.where(np.asarray(keep))[0]
+    np.testing.assert_allclose(np.asarray(k_new)[idx, 0], ks[idx], atol=1e-4)
+
+
+def test_exemplar_compress_cache_masks_positions(key):
+    cache = init_cache(batch=2, buf=64, n_kv=2, head_dim=4,
+                       dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.standard_normal((2, 64, 2, 4)).astype(np.float32))
+    cache = cache._replace(k=k, v=k * 0.5,
+                           pos=jnp.broadcast_to(jnp.arange(64), (2, 64))
+                           .astype(jnp.int32))
+    new, stats = exemplar_compress_cache(cache, window=32, preference=-10.0)
+    masked = np.asarray(new.pos[:, :32])
+    kept = int(stats.kept.sum())
+    assert (masked == -1).sum() == 2 * 32 - kept
+    # newest region untouched
+    np.testing.assert_array_equal(np.asarray(new.pos[:, 32:]),
+                                  np.asarray(cache.pos[:, 32:]))

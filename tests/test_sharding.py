@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.partitioning import (
+    _divisible_spec, filter_spec, maybe_shard, shape_safe_shardings,
+)
+
+
+def _mesh():
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def test_filter_spec_drops_missing_axes():
+    s = P(("pod", "data"), "model", None)
+    out = filter_spec(s, ("data", "model"))
+    assert out == P("data", "model", None)
+    out2 = filter_spec(s, ("model",))
+    assert out2 == P(None, "model", None)
+
+
+def test_divisible_spec_drops_indivisible():
+    mesh = jax.sharding.AbstractMesh((2,), ("data",))
+    assert _divisible_spec(P("data"), (3,), mesh) == P(None)
+    assert _divisible_spec(P("data"), (4,), mesh) == P("data")
+
+
+def test_divisible_spec_tuple_prefix():
+    mesh = jax.sharding.AbstractMesh((2, 2), ("a", "b"))
+    # dim 2: only the first axis of ("a","b") fits
+    assert _divisible_spec(P(("a", "b")), (2,), mesh) == P("a")
+    assert _divisible_spec(P(("a", "b")), (4,), mesh) == P(("a", "b"))
+
+
+def test_shape_safe_shardings_tree():
+    mesh = _mesh()
+    sds = {"x": jax.ShapeDtypeStruct((4, 4), jnp.float32),
+           "y": jax.ShapeDtypeStruct((3,), jnp.float32)}
+    specs = {"x": P("data", None), "y": P("data")}
+    out = shape_safe_shardings(mesh, sds, specs)
+    assert out["x"].spec == P("data", None)
+
+
+def test_maybe_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = maybe_shard(x, P("data", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,84 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.preferences import (
+    make_preferences, median_preference, range_mid_preference,
+)
+from repro.core.similarity import (
+    pairwise_similarity, pairwise_similarity_blockwise, set_preferences,
+    stack_levels,
+)
+
+
+def test_neg_sqeuclidean_matches_numpy(rng):
+    x = rng.standard_normal((40, 5)).astype(np.float32)
+    s = np.asarray(pairwise_similarity(jnp.asarray(x)))
+    ref = -((x[:, None] - x[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(s, ref, atol=1e-4)
+
+
+def test_blockwise_matches_dense(rng):
+    x = rng.standard_normal((100, 3)).astype(np.float32)
+    dense = pairwise_similarity(jnp.asarray(x))
+    block = pairwise_similarity_blockwise(jnp.asarray(x), block=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(block),
+                               atol=1e-4)
+
+
+def test_similarity_nonpositive_offdiag(rng):
+    x = rng.standard_normal((30, 4)).astype(np.float32)
+    s = np.asarray(pairwise_similarity(jnp.asarray(x)))
+    off = s[~np.eye(30, dtype=bool)]
+    assert np.all(off <= 1e-6)
+
+
+def test_set_preferences_diagonal(rng):
+    x = rng.standard_normal((20, 2)).astype(np.float32)
+    s = pairwise_similarity(jnp.asarray(x))
+    pref = jnp.arange(20, dtype=jnp.float32) * -1.0
+    s2 = np.asarray(set_preferences(s, pref))
+    np.testing.assert_allclose(np.diag(s2), np.asarray(pref))
+    off = ~np.eye(20, dtype=bool)
+    np.testing.assert_allclose(s2[off], np.asarray(s)[off])
+
+
+def test_stack_levels():
+    s = jnp.ones((5, 5))
+    s3 = stack_levels(s, 4)
+    assert s3.shape == (4, 5, 5)
+
+
+def test_median_preference_is_median(rng):
+    x = rng.standard_normal((15, 3)).astype(np.float32)
+    s = pairwise_similarity(jnp.asarray(x))
+    med = float(median_preference(s)[0])
+    off = np.asarray(s)[~np.eye(15, dtype=bool)]
+    assert abs(med - np.median(off)) < 1e-4
+
+
+def test_range_mid_preference(rng):
+    x = rng.standard_normal((12, 3)).astype(np.float32)
+    s = pairwise_similarity(jnp.asarray(x))
+    mid = float(range_mid_preference(s)[0])
+    off = np.asarray(s)[~np.eye(12, dtype=bool)]
+    assert abs(mid - 0.5 * (off.min() + off.max())) < 1e-3
+
+
+def test_random_preferences_in_range(key):
+    s = jnp.zeros((10, 10))
+    p = make_preferences(s, "random", key=key, low=-100.0, high=-1.0)
+    assert p.shape == (10,)
+    assert np.all(np.asarray(p) >= -100.0) and np.all(np.asarray(p) <= -1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 24), d=st.integers(1, 6), seed=st.integers(0, 99))
+def test_property_similarity_symmetric_offdiag(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    s = np.asarray(pairwise_similarity(jnp.asarray(x)))
+    np.testing.assert_allclose(s, s.T, atol=1e-3)
+    assert np.all(np.diag(s) >= -1e-4)  # self-similarity ~ 0 before prefs

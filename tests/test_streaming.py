@@ -1,0 +1,49 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metrics import purity
+from repro.core.preferences import median_preference
+from repro.core.similarity import pairwise_similarity, set_preferences
+from repro.core.streaming import converged_ap, streaming_hap
+from repro.data import gaussian_blobs
+
+
+def test_streaming_matches_quality_of_global_ap():
+    x, y = gaussian_blobs(n=1200, k=6, seed=4, spread=0.4, box=16.0)
+    res = streaming_hap(x, shard_size=256, iterations=60, pref_scale=0.25)
+    assert res.labels.shape == (1200,)
+    p = purity(res.labels, y)
+    # global AP on this (overlapping) set reaches 0.88; streaming matches
+    assert p > 0.8
+    # tiering compresses: far fewer clusters than shard-level exemplars
+    assert res.n_clusters < len(np.unique(res.shard_exemplars))
+
+
+def test_streaming_peak_state_is_shard_local():
+    """N = 2000 with shard 200: never builds a 2000^2 matrix (would be
+    visible as >64 MB peak per similarity; here shards are 0.64 MB)."""
+    x, _ = gaussian_blobs(n=2000, k=5, seed=5)
+    res = streaming_hap(x, shard_size=200, iterations=40)
+    assert res.labels.max() + 1 == res.n_clusters
+
+
+def test_converged_ap_stops_early_and_matches_fixed():
+    x, y = gaussian_blobs(n=150, k=4, seed=6, spread=0.4)
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    res = converged_ap(s, max_iterations=400, patience=20, damping=0.7)
+    assert bool(res.converged)
+    assert int(res.n_iterations) < 400
+    labels = np.asarray(res.exemplars)
+    from repro.core.assignments import canonicalize
+    assert purity(np.asarray(canonicalize(res.exemplars)), y) > 0.9
+
+
+def test_converged_ap_respects_max_iterations():
+    # adversarial: patience larger than budget => must report not converged
+    x, _ = gaussian_blobs(n=60, k=3, seed=7)
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    res = converged_ap(s, max_iterations=5, patience=100)
+    assert not bool(res.converged)
+    assert int(res.n_iterations) == 5

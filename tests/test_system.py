@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the whole system: the paper's pipeline
+(similarity -> MR-HAP -> hierarchy -> purity) and the LM framework path
+(config -> train -> checkpoint -> restore -> serve)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import hierarchical_kmeans
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.core import (
+    link_hierarchy, pairwise_similarity, purity, run_hap, set_preferences,
+    stack_levels,
+)
+from repro.core.preferences import median_preference
+from repro.data import aggregation_like
+from repro.data.pipeline import synthetic_token_stream
+from repro.models import Mode, model_init
+from repro.serve.engine import ServeEngine
+from repro.train.loop import init_train_state, make_train_step
+
+
+def test_paper_pipeline_end_to_end():
+    """§4.2's comparison, in miniature: HAP vs HK-Means on Aggregation."""
+    x, y = aggregation_like()
+    sub = slice(0, 394)  # half the set for CI speed
+    xs, ys = x[sub], y[sub]
+    s = pairwise_similarity(jnp.asarray(xs))
+    s = set_preferences(s, median_preference(s))
+    res = run_hap(stack_levels(s, 3), iterations=40, damping=0.7,
+                  order="parallel")
+    hier = link_hierarchy(res.exemplars)
+    hap_purity = purity(hier.labels[0], ys)
+
+    hk = hierarchical_kmeans(xs, levels=3, branch=3)
+    hk_purity = purity(hk.labels[0], ys)
+
+    assert hap_purity > 0.9
+    # "competitive with HK-Means" (paper Fig 5.1): within 10 points
+    assert hap_purity > hk_purity - 0.1
+    # hierarchy aggregates
+    assert hier.n_clusters[0] >= hier.n_clusters[-1]
+
+
+def test_lm_train_checkpoint_restore_serve(tmp_path, key):
+    cfg = get_arch("tinyllama-1.1b-smoke")
+    params, _ = model_init(key, cfg)
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(
+        cfg, Mode("train", "dense"),
+        lr_kwargs={"peak": 5e-3, "warmup": 2, "total": 20}))
+    stream = synthetic_token_stream(cfg.vocab, 4, 48, seed=1)
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for i in range(8):
+        state, metrics = step(state, {"tokens": jnp.asarray(next(stream))})
+        if (i + 1) % 4 == 0:
+            mgr.save(i + 1, state)
+    step_no, restored = mgr.restore_latest(state)
+    assert step_no == 8
+    d = max(float(jnp.max(jnp.abs(jnp.asarray(a) - jnp.asarray(b))))
+            for a, b in zip(jax.tree.leaves(state.params),
+                            jax.tree.leaves(restored.params)))
+    assert d == 0.0
+
+    engine = ServeEngine(cfg, restored.params, max_len=64)
+    prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab, jnp.int32)
+    out = engine.generate(prompts, steps=4)
+    assert out.shape == (2, 4)
+
+
+def test_fault_restart_resumes():
+    from repro.runtime.fault import FaultPolicy, run_with_restarts
+    calls = {"n": 0}
+
+    def flaky(_):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("simulated worker failure")
+        return "done"
+
+    out = run_with_restarts(flaky, lambda: None,
+                            FaultPolicy(max_restarts=5, backoff_s=0.0))
+    assert out == "done" and calls["n"] == 3
