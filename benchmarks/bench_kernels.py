@@ -4,9 +4,20 @@ On this container the oracle path is the performance-relevant one (Pallas
 interpret mode is a correctness harness, orders slower than compiled jnp);
 the derived column records the kernel's analytic FLOPs/bytes so the TPU
 roofline expectation is on record next to the measured oracle time.
+
+Also times one full solver sweep of the ``dense_fused`` backend (the
+Pallas responsibility/availability kernels wired into the per-level HAP
+hot loop) against the jnp ``dense_parallel`` sweep — on CPU the fused
+column measures interpret-mode overhead; on TPU it is the headline number.
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke]
+
+``--smoke`` shrinks sizes/reps so CI can run the whole file in seconds
+and still catch compile regressions in every kernel.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -26,7 +37,8 @@ def _time(fn, *args, reps=5):
     return (time.time() - t0) / reps
 
 
-def run(n: int = 1024) -> list:
+def run(n: int = 1024, reps: int = 5, sweep_n: int = 256,
+        sweep_iters: int = 3) -> list:
     rng = np.random.default_rng(0)
     s = jnp.asarray(-rng.random((n, n)).astype(np.float32) * 10)
     a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
@@ -46,27 +58,62 @@ def run(n: int = 1024) -> list:
     avail = lambda: avail_j(r, a)
     sim = lambda: sim_j(x)
 
-    bh, sq, dh = 4, 512, 64
+    bh, sq, dh = 4, max(n // 2, 64), 64
     qkv = jnp.asarray(rng.standard_normal((bh, sq, dh)).astype(np.float32))
     flash_j = jax.jit(lambda q_: ref.flash_attention(q_, q_, q_, True))
     flash = lambda: flash_j(qkv)
 
     rows = [
-        {"name": "responsibility", "us": _time(resp) * 1e6,
+        {"name": "responsibility", "us": _time(resp, reps=reps) * 1e6,
          "flops": 4 * n * n, "bytes": 4 * n * n * 4},
-        {"name": "availability", "us": _time(avail) * 1e6,
+        {"name": "availability", "us": _time(avail, reps=reps) * 1e6,
          "flops": 4 * n * n, "bytes": 4 * n * n * 4},
-        {"name": "similarity", "us": _time(sim) * 1e6,
+        {"name": "similarity", "us": _time(sim, reps=reps) * 1e6,
          "flops": 2 * n * n * 64, "bytes": (2 * n * 64 + n * n) * 4},
-        {"name": "flash_attention", "us": _time(flash) * 1e6,
+        {"name": "flash_attention", "us": _time(flash, reps=reps) * 1e6,
          "flops": 4 * bh * sq * sq * dh,
          "bytes": 4 * bh * sq * dh * 4},  # flash: O(S*D), not O(S^2)
     ]
+    rows += run_solver_sweeps(sweep_n, sweep_iters, reps)
     return rows
 
 
-def main():
-    rows = run()
+def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
+    """dense_fused (Pallas kernels in the hot loop) vs dense_parallel
+    (jnp sweeps) through the one solver driver both backends share."""
+    from repro.data import gaussian_blobs
+    from repro.solver.dense import run_dense
+
+    x, _ = gaussian_blobs(n=n, k=5, seed=0)
+    from repro.core.preferences import median_preference
+    from repro.core.similarity import (
+        pairwise_similarity, set_preferences, stack_levels,
+    )
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    s3 = stack_levels(s, 3)
+    # per-sweep analytic cost of the two kernel updates, all levels
+    flops = 2 * 4 * 3 * n * n
+    bytes_ = 2 * 4 * 3 * n * n * 4
+    rows = []
+    for order in ("parallel", "fused"):
+        fn = lambda s3_: run_dense(s3_, order=order, max_iterations=iters,
+                                   damping=0.6)[1]
+        t = _time(fn, s3, reps=reps) / iters
+        rows.append({"name": f"hap_sweep_{order}_n{n}", "us": t * 1e6,
+                     "flops": flops, "bytes": bytes_})
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes / 1 rep: CI compile-regression check")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = run(n=128, reps=1, sweep_n=96, sweep_iters=2)
+    else:
+        rows = run()
     for r in rows:
         ai = r["flops"] / r["bytes"]
         print(f"kernel_{r['name']},{r['us']:.0f},"

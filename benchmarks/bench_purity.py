@@ -3,17 +3,10 @@ from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.baselines import hierarchical_kmeans
-from repro.core import (
-    link_hierarchy, pairwise_similarity, purity, run_hap, set_preferences,
-    stack_levels,
-)
-from repro.core.preferences import median_preference
+from repro.core import link_hierarchy, purity
 from repro.data import aggregation_like, gaussian_blobs, two_moons
+from repro.solver import solve
 
 DATASETS = {
     "aggregation": aggregation_like,
@@ -26,11 +19,10 @@ def run(levels: int = 3, iterations: int = 40) -> list:
     rows = []
     for name, fn in DATASETS.items():
         x, y = fn()
-        s = pairwise_similarity(jnp.asarray(x))
-        s = set_preferences(s, median_preference(s))
         t0 = time.time()
-        res = run_hap(stack_levels(s, levels), iterations=iterations,
-                      damping=0.7, order="parallel")
+        res = solve(x, backend="dense_parallel", levels=levels,
+                    max_iterations=iterations, damping=0.7,
+                    preference="median")
         hap_t = time.time() - t0
         hier = link_hierarchy(res.exemplars)
         t0 = time.time()

@@ -5,37 +5,32 @@
 Reproduces the Mandrill/Buttons experiment settings (random preferences in
 [-1e6, 0], lambda = 0.5, 30 iterations, L = 3) on procedural stand-in
 images (no network access) and writes the recolored level images as .npy.
+One ``solve()`` call per image: the engine builds the similarity matrix,
+writes the random preferences, and runs the sweeps.
 """
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    link_hierarchy, pairwise_similarity, run_hap, set_preferences,
-    stack_levels,
-)
 from repro.core.assignments import recolor_by_exemplar
-from repro.core.preferences import random_preference
 from repro.data.images import (
     buttons_image, image_to_points, mandrill_like_image,
 )
+from repro.solver import solve
 
 
 def segment(name: str, img: np.ndarray, subsample: int) -> None:
     x = image_to_points(img, subsample=subsample)
     n = len(x)
-    s = pairwise_similarity(jnp.asarray(x))
-    s = set_preferences(
-        s, random_preference(jax.random.PRNGKey(0), n, low=-1e6))
-    res = run_hap(stack_levels(s, 3), iterations=30, damping=0.5,
-                  order="parallel")
-    hier = link_hierarchy(res.exemplars)
+    # explicit dense backend: the paper's experiment is a 3-level dense
+    # run at every image size (auto would pick the distributed backend
+    # on multi-device hosts, which is fine but not the figure setup)
+    res = solve(x, backend="dense_parallel", levels=3, max_iterations=30,
+                damping=0.5, preference="random", seed=0)
     print(f"{name}: {n} pixels -> clusters per level "
-          f"{[int(k) for k in hier.n_clusters]}")
+          f"{[int(k) for k in res.n_clusters]} (backend={res.backend})")
     for level in range(3):
-        recon = recolor_by_exemplar(x, hier.exemplars[level])
+        recon = recolor_by_exemplar(x, res.exemplars[level])
         np.save(f"/tmp/{name}_level{level}.npy", recon)
     print(f"  recolored levels saved to /tmp/{name}_level*.npy")
 

@@ -2,33 +2,30 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Covers the paper's §2 pipeline in ~20 lines of public API: similarity ->
-preferences -> HAP -> hierarchy -> purity.
+Covers the paper's §2 pipeline through the unified solver API: one
+``solve()`` call builds similarities + preferences, picks a backend for
+this host, runs a fixed budget of damped message-passing sweeps (with a
+per-sweep convergence trace; pass ``stop="converged"`` for the paper's
+"assignments stable" early-exit rule), and returns the hierarchy.
 """
-import jax
-import jax.numpy as jnp
-
-from repro.core import (
-    link_hierarchy, make_preferences, pairwise_similarity, purity, run_hap,
-    set_preferences, stack_levels,
-)
+from repro.core import link_hierarchy, purity
 from repro.data import aggregation_like
+from repro.solver import solve
 
 
 def main():
     # 788 2-D points in 7 clusters (the paper's Aggregation shape set)
     x, labels = aggregation_like()
 
-    # sole input: pairwise similarities (negative squared Euclidean) with
-    # preferences on the diagonal (median heuristic here)
-    s = pairwise_similarity(jnp.asarray(x))
-    s = set_preferences(s, make_preferences(s, "median"))
+    # 3-level hierarchy, 40 damped sweeps. The per-sweep trace counts
+    # assignment changes — pass stop="converged" to exit early once it
+    # flatlines for `patience` sweeps (see docs/solver.md).
+    result = solve(x, levels=3, damping=0.7, max_iterations=40,
+                   preference="median")
+    print(f"backend={result.backend} sweeps={result.n_sweeps} "
+          f"changes/sweep (last 5): {result.trace[-5:].tolist()}")
 
-    # 3-level hierarchy, 40 damped message-passing sweeps
-    result = run_hap(stack_levels(s, levels=3), iterations=40,
-                     damping=0.7, order="parallel")
     hier = link_hierarchy(result.exemplars)
-
     for level in range(3):
         print(f"level {level}: {hier.n_clusters[level]:3d} clusters, "
               f"purity {purity(hier.labels[level], labels):.3f}")

@@ -1,5 +1,13 @@
 # The paper's primary contribution: (Hierarchical) Affinity Propagation and
 # its distributed MapReduce-style parallelization, in JAX.
+#
+# Preferred entry point: ``repro.solver.solve`` (re-exported here) — one
+# API over every execution strategy, with automatic backend/mesh selection,
+# padding, and convergence-driven early stopping. The per-strategy
+# functions below (run_hap, run_mrhap, run_mrhap_2d, streaming_hap) are
+# kept as thin compatibility shims: they are exactly the registered solver
+# backends, minus the engine's cross-cutting care (no auto-padding, fixed
+# sweep budgets, per-backend result types). New code should call solve().
 from repro.core.affinity import (
     APResult,
     affinity_propagation,
@@ -26,6 +34,18 @@ from repro.core.similarity import (
     set_preferences,
     stack_levels,
 )
+_SOLVER_EXPORTS = ("solve", "SolveConfig", "SolveResult")
+
+
+def __getattr__(name):
+    # Lazy (PEP 562): repro.solver itself imports repro.core submodules, so
+    # an eager re-export here would be a circular import for callers who
+    # import repro.solver first.
+    if name in _SOLVER_EXPORTS:
+        import repro.solver as _solver
+        return getattr(_solver, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
 
 __all__ = [
     "APResult", "affinity_propagation", "availability_update", "masked_top2",
@@ -36,4 +56,5 @@ __all__ = [
     "converged_ap",
     "streaming_hap", "pairwise_similarity",
     "pairwise_similarity_blockwise", "set_preferences", "stack_levels",
+    "solve", "SolveConfig", "SolveResult",
 ]

@@ -30,12 +30,18 @@ def dense_labels(e: np.ndarray) -> tuple[np.ndarray, int]:
     return inv.astype(np.int32), int(uniq.size)
 
 
+def canonicalize_levels(e: np.ndarray) -> np.ndarray:
+    """Per-level canonicalize of an (L, N) exemplar array (host-side)."""
+    return np.stack([np.asarray(canonicalize(jnp.asarray(e[l])))
+                     for l in range(e.shape[0])])
+
+
 def link_hierarchy(exemplars: jnp.ndarray) -> Hierarchy:
     """Build parent links: a level-l cluster's parent is the level-(l+1)
     cluster of its exemplar point (paper §2: tiered aggregation)."""
     e = np.asarray(exemplars)
     levels, n = e.shape
-    e = np.stack([np.asarray(canonicalize(jnp.asarray(e[l]))) for l in range(levels)])
+    e = canonicalize_levels(e)
     labels = np.zeros_like(e)
     counts = np.zeros((levels,), np.int32)
     uniq_per_level = []

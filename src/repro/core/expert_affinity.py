@@ -43,6 +43,14 @@ def cluster_experts(
     s = pairwise_similarity(sig)
     off = np.asarray(s)[~np.eye(e, dtype=bool)]
     pref = float(np.median(off)) * preference_scale
+    # Frey & Dueck's degeneracy tiebreak: interchangeable experts produce
+    # exactly symmetric messages (both stay self-exemplars forever); a
+    # deterministic jitter ~1e-6 of the similarity scale breaks the saddle
+    # without moving any non-degenerate decision.
+    jitter_rng = np.random.default_rng(e)
+    s = s + jnp.asarray(
+        1e-6 * max(float(np.abs(off).mean()), 1e-12)
+        * jitter_rng.standard_normal(s.shape).astype(np.float32))
     s = set_preferences(s, pref)
     res = affinity_propagation(s, iterations=iterations, damping=damping)
     ex = np.asarray(canonicalize(res.exemplars))

@@ -151,18 +151,26 @@ def hap_sweep_sequential(
     return HAPState(s, r, a, tau, phi, c)
 
 
-def hap_sweep_parallel(
-    state: HAPState, lam: float, kappa: float, s_mode: SUpdateMode,
-    first_iter: jnp.ndarray,
+def jacobi_sweep(
+    state: HAPState, first_iter, *, lam: float, kappa: float,
+    s_mode: SUpdateMode, update_r, update_a,
 ) -> HAPState:
-    """One MR-schedule iteration (§3): all levels Jacobi, two fused jobs.
+    """One MR-schedule iteration (§3) with injected tensor updates.
 
-    Job 1: tau, c (skipped when ``first_iter``), then rho.
-    Job 2: phi, then alpha.
+    The inter-level scaffolding — tau/c gated on ``first_iter`` (§3.0.1),
+    phi from the previous iteration's alpha, the optional Eq 2.7
+    similarity refinement — is schedule-defining and shared; only the two
+    heavy O(L*N^2) updates vary by backend:
+
+        update_r(s, a, tau, r_old) -> damped rho   (stacked (L, N, N))
+        update_a(r, c, phi, a_old) -> damped alpha
+
+    ``hap_sweep_parallel`` injects the jnp reference pair; the solver's
+    ``dense_fused`` backend injects the Pallas kernel pair. One body
+    keeps the two bit-for-bit comparable by construction.
     """
     s, r, a = state.s, state.r, state.a
     tau, phi, c = state.tau, state.phi, state.c
-    levels = s.shape[0]
 
     # --- Job 1 ---------------------------------------------------------
     # tau^{l+1} from level l's previous-iteration rho/c; tau[0] stays +inf.
@@ -172,13 +180,13 @@ def hap_sweep_parallel(
     keep = jnp.asarray(first_iter)
     tau = jnp.where(keep, tau, tau_new)
     c = jnp.where(keep, c, c_new)
-    r = _damp(r, jax.vmap(rho_update)(s, a, tau), lam)
+    r = update_r(s, a, tau, r)
 
     # --- Job 2 ---------------------------------------------------------
     # phi^{l-1} from level l's alpha (previous iteration); phi[L-1] stays 0.
     phi_new = jax.vmap(phi_from_level)(a[1:], s[1:])            # (L-1, N)
     phi = jnp.concatenate([phi_new, phi[-1:]], axis=0)
-    a = _damp(a, jax.vmap(alpha_update)(r, c, phi), lam)
+    a = update_a(r, c, phi, a)
 
     if s_mode != "off":
         s_upd = jax.vmap(
@@ -186,6 +194,23 @@ def hap_sweep_parallel(
         )(s[1:], a[:-1], r[:-1])
         s = jnp.concatenate([s[:1], s_upd], axis=0)
     return HAPState(s, r, a, tau, phi, c)
+
+
+def hap_sweep_parallel(
+    state: HAPState, lam: float, kappa: float, s_mode: SUpdateMode,
+    first_iter: jnp.ndarray,
+) -> HAPState:
+    """One MR-schedule iteration (§3): all levels Jacobi, two fused jobs.
+
+    Job 1: tau, c (skipped when ``first_iter``), then rho.
+    Job 2: phi, then alpha.
+    """
+    return jacobi_sweep(
+        state, first_iter, lam=lam, kappa=kappa, s_mode=s_mode,
+        update_r=lambda s, a, tau, r: _damp(
+            r, jax.vmap(rho_update)(s, a, tau), lam),
+        update_a=lambda r, c, phi, a: _damp(
+            a, jax.vmap(alpha_update)(r, c, phi), lam))
 
 
 def extract_exemplars(state: HAPState) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -208,7 +233,14 @@ def run_hap(
     kappa: float = 0.0,
     s_mode: SUpdateMode = "off",
 ) -> HAPResult:
-    """Run HAP on an (L, N, N) similarity tensor for ``iterations`` sweeps."""
+    """Run HAP on an (L, N, N) similarity tensor for ``iterations`` sweeps.
+
+    .. deprecated:: prefer ``repro.solver.solve`` (backends
+       ``dense_sequential`` / ``dense_parallel``), which adds
+       convergence-driven early stopping and a per-sweep trace. Kept as
+       the registered backends' sweep implementation and for
+       compatibility.
+    """
     s3 = s3.astype(jnp.float32)
     init = hap_init(s3)
 

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import hap
 from repro.core.affinity import masked_top2
+from repro.sharding.compat import pvary, shard_map
 
 CommMode = Literal["stats", "transpose"]
 AXIS = "workers"
@@ -204,7 +205,7 @@ def _run_body_stats(s3, *, iterations, lam, n_local):
     levels, _, n = s3.shape
     zero_g = jnp.zeros((levels, n), s3.dtype)
     # all_gather outputs are vma-varying over AXIS; match the carry types.
-    vary = lambda x: jax.lax.pvary(x, (AXIS,))
+    vary = lambda x: pvary(x, (AXIS,))
     carry = (z, z, vary(zero_g), zero_g, vary(zero_g))
     sweep = functools.partial(_sweep_stats, s_loc=s3, lam=lam, n_local=n_local)
     carry, _ = jax.lax.scan(sweep, carry, jnp.arange(iterations))
@@ -217,7 +218,7 @@ def _run_body_transpose(s_row, s_col, *, iterations, lam, n_local):
     levels, _, n = s_row.shape
     z_row = jnp.zeros_like(s_row)
     z_col = jnp.zeros_like(s_col)
-    zero_g = jax.lax.pvary(jnp.zeros((levels, n), s_row.dtype), (AXIS,))
+    zero_g = pvary(jnp.zeros((levels, n), s_row.dtype), (AXIS,))
     carry = (z_row, z_col, z_col, zero_g)
     sweep = functools.partial(
         _sweep_transpose, s_row=s_row, s_col=s_col, lam=lam, n_local=n_local)
@@ -239,7 +240,12 @@ def run_mrhap(
     comm_mode: CommMode = "stats",
     axis_name: str = AXIS,
 ) -> MRHAPResult:
-    """Distributed HAP over ``mesh[axis_name]``; N must divide evenly."""
+    """Distributed HAP over ``mesh[axis_name]``; N must divide evenly.
+
+    .. deprecated:: prefer ``repro.solver.solve`` (backends
+       ``mr1d_stats`` / ``mr1d_transpose``), which pads N to the mesh
+       automatically and strips the dummies from results.
+    """
     levels, n, n2 = s3.shape
     assert n == n2, "similarity tensor must be (L, N, N)"
     workers = mesh.shape[axis_name]
@@ -247,33 +253,38 @@ def run_mrhap(
         raise ValueError(
             f"N={n} must be divisible by workers={workers}; pad with "
             "repro.core.mrhap.pad_similarity first.")
-    n_local = n // workers
     s3 = s3.astype(jnp.float32)
-
-    row_spec = P(None, axis_name, None)
-    col_spec = P(None, None, axis_name)
-    vec_spec = P(None, axis_name)
-
-    if comm_mode == "stats":
-        body = functools.partial(
-            _run_body_stats, iterations=iterations, lam=damping,
-            n_local=n_local)
-        fn = jax.shard_map(
-            body, mesh=mesh, in_specs=(row_spec,),
-            out_specs=(vec_spec, row_spec, row_spec))
-        e, r, a = jax.jit(fn)(s3)
-    else:
-        body = functools.partial(
-            _run_body_transpose, iterations=iterations, lam=damping,
-            n_local=n_local)
-        fn = jax.shard_map(
-            body, mesh=mesh, in_specs=(row_spec, col_spec),
-            out_specs=(vec_spec, row_spec, row_spec))
-        e, r, a = jax.jit(fn)(s3, s3)
+    fn = _mrhap_program(mesh, axis_name, comm_mode, iterations, damping,
+                        n // workers)
+    e, r, a = fn(s3) if comm_mode == "stats" else fn(s3, s3)
 
     hot = jax.vmap(lambda ei: jnp.zeros((n,), bool).at[ei].set(True))(e)
     k = jnp.sum(hot, axis=1).astype(jnp.int32)
     return MRHAPResult(e, k, r, a)
+
+
+@functools.lru_cache(maxsize=32)
+def _mrhap_program(mesh: Mesh, axis_name: str, comm_mode: CommMode,
+                   iterations: int, damping: float, n_local: int):
+    """Jitted shard_map program, cached so repeated run_mrhap calls with
+    the same mesh/config hit XLA's compile cache instead of rebuilding a
+    fresh jit wrapper (and re-tracing) every call."""
+    row_spec = P(None, axis_name, None)
+    col_spec = P(None, None, axis_name)
+    vec_spec = P(None, axis_name)
+    if comm_mode == "stats":
+        body = functools.partial(
+            _run_body_stats, iterations=iterations, lam=damping,
+            n_local=n_local)
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(row_spec,),
+            out_specs=(vec_spec, row_spec, row_spec)))
+    body = functools.partial(
+        _run_body_transpose, iterations=iterations, lam=damping,
+        n_local=n_local)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(row_spec, col_spec),
+        out_specs=(vec_spec, row_spec, row_spec)))
 
 
 # -------------------------------------------------------------- utilities
@@ -401,7 +412,7 @@ def _sweep_stats_2d(carry, it, *, s_loc, lam, nr_loc, nc_loc):
 
 def _run_body_2d(s_loc, *, iterations, lam, nr_loc, nc_loc, n, levels):
     z = jnp.zeros_like(s_loc)
-    vary = lambda x, ax: jax.lax.pvary(x, ax)
+    vary = lambda x, ax: pvary(x, ax)
     # vma bookkeeping: all_gather over R -> varying {R}; psum over R of a
     # tile-varying value -> varying {C}.
     c_g = vary(jnp.zeros((levels, n), s_loc.dtype), (AXIS_R,))
@@ -421,7 +432,10 @@ def run_mrhap_2d(
     s3: jnp.ndarray, mesh: Mesh, *, iterations: int = 30,
     damping: float = 0.5, row_axis: str = AXIS_R, col_axis: str = AXIS_C,
 ) -> MRHAPResult:
-    """2-D tile-decomposed MR-HAP over mesh[row_axis] x mesh[col_axis]."""
+    """2-D tile-decomposed MR-HAP over mesh[row_axis] x mesh[col_axis].
+
+    .. deprecated:: prefer ``repro.solver.solve`` (backend ``mr2d``).
+    """
     levels, n, n2 = s3.shape
     assert n == n2
     nr = mesh.shape[row_axis]
@@ -429,14 +443,23 @@ def run_mrhap_2d(
     if n % nr or n % nc:
         raise ValueError(f"N={n} must divide both mesh axes ({nr}, {nc})")
     s3 = s3.astype(jnp.float32)
-    body = functools.partial(
-        _run_body_2d, iterations=iterations, lam=damping,
-        nr_loc=n // nr, nc_loc=n // nc, n=n, levels=levels)
-    tile = P(None, row_axis, col_axis)
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=(tile,),
-        out_specs=(P(None, row_axis), tile, tile))
-    e, r, a = jax.jit(fn)(s3)
+    fn = _mrhap_2d_program(mesh, row_axis, col_axis, iterations, damping,
+                           n // nr, n // nc, n, levels)
+    e, r, a = fn(s3)
     hot = jax.vmap(lambda ei: jnp.zeros((n,), bool).at[ei].set(True))(e)
     k = jnp.sum(hot, axis=1).astype(jnp.int32)
     return MRHAPResult(e, k, r, a)
+
+
+@functools.lru_cache(maxsize=32)
+def _mrhap_2d_program(mesh: Mesh, row_axis: str, col_axis: str,
+                      iterations: int, damping: float, nr_loc: int,
+                      nc_loc: int, n: int, levels: int):
+    """Cached jitted 2-D program (same rationale as ``_mrhap_program``)."""
+    body = functools.partial(
+        _run_body_2d, iterations=iterations, lam=damping,
+        nr_loc=nr_loc, nc_loc=nc_loc, n=n, levels=levels)
+    tile = P(None, row_axis, col_axis)
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(tile,),
+        out_specs=(P(None, row_axis), tile, tile)))

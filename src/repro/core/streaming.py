@@ -40,6 +40,7 @@ class StreamingResult(NamedTuple):
     exemplar_points: np.ndarray  # (K, d) chosen exemplar coordinates
     shard_exemplars: np.ndarray  # (N,) index of each point's shard exemplar
     n_clusters: int
+    exemplar_of: np.ndarray     # (N,) point index of each point's exemplar
 
 
 def _ap_labels(x: np.ndarray, iterations: int, damping: float,
@@ -54,7 +55,11 @@ def streaming_hap(
     x: np.ndarray, *, shard_size: int = 512, iterations: int = 80,
     damping: float = 0.7, pref_scale: float = 1.0, seed: int = 0,
 ) -> StreamingResult:
-    """Two-tier exemplar clustering with O(shard_size^2) peak state."""
+    """Two-tier exemplar clustering with O(shard_size^2) peak state.
+
+    .. deprecated:: prefer ``repro.solver.solve`` (backend
+       ``sharded_streaming``), which shares the uniform SolveResult.
+    """
     x = np.asarray(x, np.float32)
     n = len(x)
     rng = np.random.default_rng(seed)
@@ -79,7 +84,8 @@ def streaming_hap(
         [top_of[int(e)] for e in shard_exemplar_of])
     uniq, labels = np.unique(final_exemplar, return_inverse=True)
     return StreamingResult(labels.astype(np.int32), x[uniq],
-                           shard_exemplar_of, len(uniq))
+                           shard_exemplar_of, len(uniq),
+                           final_exemplar.astype(np.int32))
 
 
 # -------------------------------------------------------- convergence AP

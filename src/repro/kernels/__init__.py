@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: compile natively on TPU, emulate
+    elsewhere (this CPU container). Kernel entry points take
+    ``interpret=None`` and resolve it here at call time, so the same call
+    site is the correctness harness on CPU and the hot path on TPU."""
+    return jax.default_backend() != "tpu"

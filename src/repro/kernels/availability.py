@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 
 def _colstats_kernel(r_ref, col_ref, diag_ref, *, block_k: int, block_j: int):
     jc = pl.program_id(0)   # column-tile index (outer)
@@ -66,13 +68,16 @@ def _emit_kernel(r_ref, a_old_ref, base_ref, col_ref, diag_ref, out_ref,
 def availability_pallas(
     r: jnp.ndarray, c: jnp.ndarray, phi: jnp.ndarray, a_old: jnp.ndarray,
     lam: float,
-    *, block_i: int = 256, block_j: int = 256, interpret: bool = True,
+    *, block_i: int = 256, block_j: int = 256,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Shapes: r, a_old (N, N); c, phi (N,). Returns damped alpha (N, N).
 
     Padding neutral: r padded with -1 (clamped to 0 in the column sums and
     never on the diagonal of a real column).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, m = r.shape
     bi, bj = min(block_i, n), min(block_j, m)
     pn, pm = (-n) % bi, (-m) % bj

@@ -21,6 +21,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import default_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = float("-inf")
@@ -75,7 +77,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_pallas(
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     causal: bool = True, block_q: int = 256, block_k: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """q: (BH, Sq, D); k, v: (BH, Sk, D) -> (BH, Sq, D).
 
@@ -83,6 +85,8 @@ def flash_attention_pallas(
     KV heads. Sq/Sk padded to block multiples with masked tail (pad keys
     get -inf scores via the causal/row guard: pad rows emit zeros).
     """
+    if interpret is None:
+        interpret = default_interpret()
     bh, sq, d = q.shape
     sk = k.shape[1]
     bq, bk = min(block_q, sq), min(block_k, sk)

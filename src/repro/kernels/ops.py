@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import default_interpret, ref
 from repro.kernels.availability import availability_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.responsibility import responsibility_pallas
@@ -21,7 +21,7 @@ from repro.kernels.similarity import similarity_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return default_interpret()
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "block", "use_ref"))

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 NEG_INF = float("-inf")
 
 
@@ -69,13 +71,16 @@ def _emit_kernel(s_ref, r_old_ref, tau_ref, m1_ref, i1_ref, m2_ref, out_ref,
 def responsibility_pallas(
     s: jnp.ndarray, a: jnp.ndarray, tau: jnp.ndarray, r_old: jnp.ndarray,
     lam: float,
-    *, block_i: int = 256, block_j: int = 256, interpret: bool = True,
+    *, block_i: int = 256, block_j: int = 256,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Shapes: s, a, r_old (N, M); tau (N,). Returns damped rho (N, M).
 
     N, M need not be tile-aligned — inputs are padded with neutral values
     (-inf similarities never win the max; padded rows get tau = 0).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, m = s.shape
     bi, bj = min(block_i, n), min(block_j, m)
     pn, pm = (-n) % bi, (-m) % bj

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
+
 
 def _sim_kernel(x_ref, y_ref, out_ref):
     x = x_ref[...].astype(jnp.float32)                  # (bi, d)
@@ -32,9 +34,16 @@ def _sim_kernel(x_ref, y_ref, out_ref):
 
 def similarity_pallas(
     x: jnp.ndarray, y: jnp.ndarray | None = None,
-    *, block_i: int = 256, block_j: int = 256, interpret: bool = True,
+    *, block_i: int = 256, block_j: int = 256,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """x (N, d), y (M, d) -> (N, M) negative squared distances."""
+    """x (N, d), y (M, d) -> (N, M) negative squared distances.
+
+    ``interpret=None`` derives the mode from the backend (native on
+    TPU, emulated elsewhere) — see ``repro.kernels.default_interpret``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     if y is None:
         y = x
     n, d = x.shape

@@ -72,9 +72,9 @@ def main(argv=None) -> int:
         ndev = len(jax.devices())
         rows = max(int(ndev ** 0.5), 1)
         cols = max(ndev // rows, 1)
-        mesh = jax.make_mesh((rows, cols), ("rows", "cols"),
-                             devices=jax.devices()[: rows * cols],
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.sharding.compat import make_mesh
+        mesh = make_mesh((rows, cols), ("rows", "cols"),
+                         devices=jax.devices()[: rows * cols])
         workers = rows * cols
         s3p, n_real = pad_similarity(s3, rows * cols)
         t0 = time.time()

@@ -5,7 +5,8 @@ jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.sharding.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,11 +17,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     import math
     ndev = math.prod(shape)
     devices = jax.devices()[:ndev]
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_worker_mesh(workers: int | None = None, axis_name: str = "workers"):
     """1-D mesh over all local devices for the MR-HAP clustering runtime."""
     n = workers or len(jax.devices())
-    return jax.make_mesh((n,), (axis_name,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (axis_name,))

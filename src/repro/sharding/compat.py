@@ -1,0 +1,98 @@
+"""Version compatibility shims for the jax sharding/mesh API.
+
+The codebase targets the modern mesh API (``jax.shard_map``,
+``jax.sharding.get_abstract_mesh``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.set_mesh``, ``jax.lax.pvary``) but must also run on jax 0.4.x, where
+those live elsewhere or do not exist:
+
+==============================  =========================================
+modern (>= 0.6)                 jax 0.4.x fallback
+==============================  =========================================
+jax.sharding.get_abstract_mesh  thread-resources mesh set by ``with mesh:``
+jax.set_mesh(mesh)              ``with mesh:`` (Mesh is a context manager)
+jax.shard_map                   jax.experimental.shard_map.shard_map
+                                (check_rep disabled: 0.4.x lacks rep
+                                rules for several lax control-flow prims)
+jax.make_mesh(axis_types=...)   jax.make_mesh without axis_types (the
+                                modern default, Auto, is the only mode
+                                0.4.x has)
+jax.sharding.AbstractMesh(s, n) AbstractMesh(tuple(zip(n, s)))
+jax.lax.pvary                   identity (0.4.x has no varying-axis
+                                bookkeeping to satisfy)
+==============================  =========================================
+
+Everything below is a thin dispatch on feature presence, not on version
+strings, so intermediate releases pick whichever surface they have.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Sequence
+
+import jax
+
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_TOP_LEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_PVARY = hasattr(jax.lax, "pvary")
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def get_abstract_mesh():
+    """The mesh currently in context, or an empty mesh when none is.
+
+    Modern jax: the abstract mesh installed by ``jax.set_mesh``. 0.4.x: the
+    physical mesh installed by ``with mesh:`` (the legacy thread-resources
+    context), which exposes the same ``.empty`` / ``.axis_names`` /
+    ``.shape`` surface the callers need.
+    """
+    if _HAS_GET_ABSTRACT_MESH:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if _HAS_SET_MESH:
+        return jax.set_mesh(mesh)
+    # 0.4.x: entering a Mesh sets the thread-resources env that
+    # with_sharding_constraint and get_abstract_mesh (above) read.
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with the 0.4.x experimental module as fallback."""
+    if _HAS_TOP_LEVEL_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` as varying over ``axis_names`` (no-op on 0.4.x)."""
+    if _HAS_PVARY:
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None):
+    """``jax.make_mesh`` with every axis in Auto mode on any jax version."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names), devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         devices=devices)
+
+
+def make_abstract_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """Device-less AbstractMesh across both constructor signatures."""
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    try:
+        return jax.sharding.AbstractMesh(shapes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shapes)))

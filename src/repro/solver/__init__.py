@@ -1,0 +1,23 @@
+"""Unified HAP solver engine: one ``solve()`` API, pluggable backends.
+
+    from repro.solver import solve, SolveConfig
+
+    res = solve(points)                              # auto backend
+    res = solve(points, stop="converged")            # early stopping
+    res = solve(s3, backend="mr1d_stats")            # distributed
+    res.exemplars, res.n_clusters, res.trace         # uniform result
+
+See docs/solver.md for the backend table and selection rules.
+"""
+from repro.solver.config import SolveConfig
+from repro.solver.engine import solve
+from repro.solver.registry import (
+    BackendSpec, auto_select, get_backend, list_backends, register_backend,
+)
+from repro.solver.result import RawBackendResult, SolveResult
+
+__all__ = [
+    "solve", "SolveConfig", "SolveResult", "RawBackendResult",
+    "BackendSpec", "register_backend", "get_backend", "list_backends",
+    "auto_select",
+]

@@ -1,0 +1,113 @@
+"""The six registered backends: every pre-engine entry point, adapted.
+
+Importing this module populates the registry (``registry.get_backend``
+does so lazily). Each adapter receives input the engine already prepared
+(similarity stack padded to the mesh tile, or raw points) plus the full
+``SolveConfig``, and returns a ``RawBackendResult`` the engine finishes
+(strip padding, canonicalize, relabel).
+
+Backend table
+=============
+dense_sequential   Alg. 1 as printed (Gauss-Seidel over levels), 1 device
+dense_parallel     §3 Jacobi schedule, XLA-fused jnp sweeps, 1 device
+dense_fused        §3 Jacobi schedule, Pallas responsibility/availability
+                   kernels in the per-level hot loop (TPU-native)
+mr1d_stats         shard_map over a 1-D mesh, O(L*N) stats communication
+mr1d_transpose     paper-faithful shuffles (distributed transposes),
+                   O(L*N^2/W) communication
+mr2d               2-D tile decomposition (lifts the M <= L*N ceiling)
+sharded_streaming  two-tier shard-local AP, O((N/S)^2) peak state
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.mrhap import run_mrhap, run_mrhap_2d
+from repro.core.streaming import streaming_hap
+from repro.solver import dense
+from repro.solver.config import SolveConfig
+from repro.solver.registry import BackendSpec, register_backend
+from repro.solver.result import RawBackendResult
+
+
+# ------------------------------------------------------------ dense family
+def _dense_runner(order: str):
+    def run(s3, cfg: SolveConfig) -> RawBackendResult:
+        state, e, n_sweeps, conv, trace = dense.run_dense(
+            s3, order=order, max_iterations=cfg.max_iterations,
+            damping=cfg.damping, kappa=cfg.kappa, s_mode=cfg.s_mode,
+            stop=cfg.stop, patience=cfg.patience, block=cfg.block)
+        n_sweeps = int(n_sweeps)
+        converged = bool(conv) if cfg.stop == "converged" else None
+        return RawBackendResult(
+            exemplars=e, n_sweeps=n_sweeps, converged=converged,
+            trace=np.asarray(trace)[:n_sweeps],
+            state=state if cfg.keep_state else None)
+    return run
+
+
+register_backend(BackendSpec(
+    name="dense_sequential", run=_dense_runner("sequential"),
+    supports_early_stop=True,
+    doc="Alg. 1 Gauss-Seidel dense sweeps (single device)"))
+
+register_backend(BackendSpec(
+    name="dense_parallel", run=_dense_runner("parallel"),
+    supports_early_stop=True,
+    doc="MR Jacobi schedule, XLA-fused dense sweeps (single device)"))
+
+register_backend(BackendSpec(
+    name="dense_fused", run=_dense_runner("fused"),
+    supports_early_stop=True,
+    doc="MR Jacobi schedule with Pallas kernels in the hot loop"))
+
+
+# ------------------------------------------------------------- MR family
+def _mr1d_runner(comm_mode: str):
+    def run(s3, cfg: SolveConfig) -> RawBackendResult:
+        res = run_mrhap(s3, cfg.mesh, iterations=cfg.max_iterations,
+                        damping=cfg.damping, comm_mode=comm_mode)
+        return RawBackendResult(
+            exemplars=res.exemplars, n_sweeps=cfg.max_iterations,
+            converged=None, trace=None)
+    return run
+
+
+register_backend(BackendSpec(
+    name="mr1d_stats", run=_mr1d_runner("stats"), mesh_kind="1d",
+    doc="1-D row sharding, O(L*N) statistics communication"))
+
+register_backend(BackendSpec(
+    name="mr1d_transpose", run=_mr1d_runner("transpose"), mesh_kind="1d",
+    doc="paper-faithful distributed transposes, O(L*N^2/W) communication"))
+
+
+def _mr2d_run(s3, cfg: SolveConfig) -> RawBackendResult:
+    res = run_mrhap_2d(s3, cfg.mesh, iterations=cfg.max_iterations,
+                       damping=cfg.damping)
+    return RawBackendResult(
+        exemplars=res.exemplars, n_sweeps=cfg.max_iterations,
+        converged=None, trace=None)
+
+
+register_backend(BackendSpec(
+    name="mr2d", run=_mr2d_run, mesh_kind="2d",
+    doc="2-D tile decomposition over rows x cols mesh axes"))
+
+
+# ----------------------------------------------------------- streaming
+def _streaming_run(x, cfg: SolveConfig) -> RawBackendResult:
+    res = streaming_hap(
+        np.asarray(x), shard_size=cfg.shard_size,
+        iterations=cfg.max_iterations, damping=cfg.damping,
+        pref_scale=cfg.pref_scale, seed=cfg.seed)
+    # two internal tiers collapse to one output level: each point's final
+    # exemplar (its shard exemplar's top-level exemplar)
+    return RawBackendResult(
+        exemplars=res.exemplar_of[None, :], n_sweeps=cfg.max_iterations,
+        converged=None, trace=None)
+
+
+register_backend(BackendSpec(
+    name="sharded_streaming", run=_streaming_run, needs_points=True,
+    doc="two-tier shard-local AP; O((N/S)^2) state, single output level"))

@@ -1,0 +1,81 @@
+"""Configuration for the unified HAP solver engine.
+
+One dataclass covers every backend; adapters read only the fields they
+understand and the engine owns the cross-cutting ones (stopping rule,
+padding, mesh/backend selection).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal, Optional
+
+InputKind = Literal["auto", "points", "similarity"]
+StopRule = Literal["fixed", "converged"]
+
+#: N at or above which auto-selection prefers the O((N/S)^2)-state
+#: sharded-streaming backend over materializing the (L, N, N) tensors
+#: (requires raw points).
+STREAMING_THRESHOLD = 8192
+
+#: N at or above which a multi-device host prefers the distributed
+#: mr1d_stats backend over single-device dense sweeps.
+DISTRIBUTED_THRESHOLD = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """Everything ``repro.solver.solve`` needs beyond the data itself.
+
+    Stopping. ``stop="fixed"`` runs exactly ``max_iterations`` sweeps (the
+    paper's figures use fixed budgets). ``stop="converged"`` runs until the
+    exemplar assignment of every level is unchanged for ``patience``
+    consecutive sweeps — the paper's (and Givoni et al.'s) "run until
+    assignments are stable" rule — bounded by ``max_iterations``, inside a
+    single jitted ``lax.while_loop`` so early exit saves real work.
+
+    Input. ``input_kind="auto"`` treats a 3-D array as an (L, N, N)
+    similarity stack, a square 2-D array as an (N, N) similarity matrix
+    (replicated to ``levels``), and anything else 2-D as (N, d) points.
+    When the engine builds similarities from points it also writes
+    ``preference`` onto the diagonal; a similarity input's diagonal is the
+    caller's responsibility and is never touched.
+    """
+    # backend selection ("auto" = pick from N, L, devices — see
+    # repro.solver.registry.auto_select)
+    backend: str = "auto"
+
+    # input interpretation
+    input_kind: InputKind = "auto"
+    levels: int = 3
+    metric: str = "neg_sqeuclidean"
+    # "median" | "range_mid" | float | (N,) array; applied only when the
+    # engine builds the similarity matrix from points.
+    preference: Any = "median"
+
+    # message passing
+    max_iterations: int = 50
+    damping: float = 0.7
+    kappa: float = 0.0
+    s_mode: str = "off"
+
+    # stopping rule
+    stop: StopRule = "fixed"
+    patience: int = 5
+
+    # distributed backends (mr1d_*, mr2d)
+    mesh: Optional[Any] = None          # jax Mesh; auto-built when None
+    pad_to: Optional[int] = None        # force-pad N to a multiple (tests)
+
+    # dense_fused
+    block: int = 256
+
+    # sharded_streaming
+    shard_size: int = 512
+    pref_scale: float = 1.0
+    seed: int = 0
+
+    # extras
+    keep_state: bool = False            # attach final HAPState (dense only)
+
+    def replace(self, **kw) -> "SolveConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,142 @@
+"""Single-device dense sweep drivers for the solver engine.
+
+Two pieces:
+
+* ``fused_sweep`` — one Jacobi (§3-schedule) HAP iteration whose heavy
+  O(L*N^2) tensor updates run through the Pallas kernels
+  (``repro.kernels.responsibility`` / ``availability``) instead of the
+  jnp reference ops. The O(N)-output inter-level reductions (tau, phi, c)
+  stay as jnp reductions — they read the same tensors the kernels just
+  streamed and are not the bottleneck. Matches
+  ``hap_sweep_parallel`` numerically (same formulas, same tie rules; the
+  kernel's tiled column sums can differ from XLA's reduction order by
+  float-associativity ulps, which never moves an argmax on real data).
+
+* ``run_dense`` — the jitted driver the engine calls for the whole dense
+  family (``dense_sequential``, ``dense_parallel``, ``dense_fused``).
+  ``stop="fixed"`` scans exactly ``max_iterations`` sweeps; per-sweep
+  exemplar-change counts come back as the convergence trace.
+  ``stop="converged"`` runs a single ``lax.while_loop`` that exits as soon
+  as assignments have been stable for ``patience`` sweeps — early exit
+  happens on device, inside jit, so converging in 19 sweeps costs 19
+  sweeps, not ``max_iterations``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hap
+from repro.kernels.availability import availability_pallas
+from repro.kernels.responsibility import responsibility_pallas
+
+DenseOrder = ("sequential", "parallel", "fused")
+
+
+def fused_sweep(state: hap.HAPState, first_iter, *, lam: float,
+                kappa: float, s_mode: str, block: int) -> hap.HAPState:
+    """One MR-schedule iteration with Pallas-kernel tensor updates.
+
+    Shares ``hap.jacobi_sweep``'s Job-1/Job-2 scaffolding with
+    ``hap_sweep_parallel`` and injects the fused damped
+    responsibility/availability kernels as the per-level heavy updates
+    (L is small and static: the level loop is unrolled).
+    """
+    def update_r(s, a, tau, r):
+        return jnp.stack([
+            responsibility_pallas(s[l], a[l], tau[l], r[l], lam,
+                                  block_i=block, block_j=block)
+            for l in range(s.shape[0])])
+
+    def update_a(r, c, phi, a):
+        return jnp.stack([
+            availability_pallas(r[l], c[l], phi[l], a[l], lam,
+                                block_i=block, block_j=block)
+            for l in range(r.shape[0])])
+
+    return hap.jacobi_sweep(state, first_iter, lam=lam, kappa=kappa,
+                            s_mode=s_mode, update_r=update_r,
+                            update_a=update_a)
+
+
+def _make_sweep(order: str, damping: float, kappa: float, s_mode: str,
+                block: int):
+    if order == "sequential":
+        return lambda st, it: hap.hap_sweep_sequential(
+            st, damping, kappa, s_mode)
+    if order == "parallel":
+        return lambda st, it: hap.hap_sweep_parallel(
+            st, damping, kappa, s_mode, it == 0)
+    if order == "fused":
+        return lambda st, it: fused_sweep(
+            st, it == 0, lam=damping, kappa=kappa, s_mode=s_mode,
+            block=block)
+    raise ValueError(f"unknown dense order {order!r}")
+
+
+def _assignments(state: hap.HAPState) -> jnp.ndarray:
+    return jnp.argmax(state.a + state.r, axis=2).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("order", "max_iterations", "damping", "kappa",
+                     "s_mode", "stop", "patience", "block"))
+def run_dense(
+    s3: jnp.ndarray,
+    *,
+    order: str,
+    max_iterations: int,
+    damping: float = 0.5,
+    kappa: float = 0.0,
+    s_mode: str = "off",
+    stop: str = "fixed",
+    patience: int = 5,
+    block: int = 256,
+):
+    """Run a dense backend on an (L, N, N) stack.
+
+    Returns ``(state, exemplars, n_sweeps, converged, trace)`` where
+    ``trace`` has length ``max_iterations``; entries past ``n_sweeps``
+    are -1 (the while_loop never wrote them).
+    """
+    s3 = s3.astype(jnp.float32)
+    levels, n, _ = s3.shape
+    init = hap.hap_init(s3)
+    sweep = _make_sweep(order, damping, kappa, s_mode, block)
+    e0 = jnp.full((levels, n), -1, jnp.int32)
+
+    if stop == "fixed":
+        def step(carry, it):
+            state, e_prev = carry
+            state = sweep(state, it)
+            e = _assignments(state)
+            changed = jnp.sum((e != e_prev).astype(jnp.int32))
+            return (state, e), changed
+
+        (state, e), trace = jax.lax.scan(
+            step, (init, e0), jnp.arange(max_iterations))
+        return (state, e, jnp.int32(max_iterations), jnp.asarray(False),
+                trace)
+
+    # stop == "converged": fused while_loop with a patience counter
+    trace0 = jnp.full((max_iterations,), -1, jnp.int32)
+
+    def cond(carry):
+        _, _, stable, it, _ = carry
+        return (it < max_iterations) & (stable < patience)
+
+    def body(carry):
+        state, e_prev, stable, it, trace = carry
+        state = sweep(state, it)
+        e = _assignments(state)
+        changed = jnp.sum((e != e_prev).astype(jnp.int32))
+        stable = jnp.where(changed == 0, stable + 1, jnp.int32(0))
+        trace = trace.at[it].set(changed)
+        return (state, e, stable, it + 1, trace)
+
+    carry = (init, e0, jnp.int32(0), jnp.int32(0), trace0)
+    state, e, stable, it, trace = jax.lax.while_loop(cond, body, carry)
+    return state, e, it, stable >= patience, trace

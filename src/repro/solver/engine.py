@@ -1,0 +1,183 @@
+"""``solve()`` — the single front door for every HAP execution strategy.
+
+    from repro.solver import solve
+    res = solve(points)                        # auto backend, 3 levels
+    res = solve(s3, backend="mr1d_stats")      # explicit distributed run
+    res = solve(points, stop="converged")      # run until assignments stable
+
+The engine owns what call sites used to hand-roll:
+
+* input normalization — (N, d) points, (N, N) similarity, or (L, N, N)
+  stacks all accepted; similarity construction (Pallas kernel on the fused
+  path) and preference writing happen here;
+* backend + mesh selection from N, L, and available devices;
+* ``pad_similarity``/unpad when N doesn't divide the mesh — results come
+  back in the caller's original N with dummy points stripped;
+* the stopping rule — fixed sweep budgets or convergence-driven early
+  stopping with a per-sweep assignment-change trace.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.assignments import canonicalize_levels, dense_labels
+from repro.core.mrhap import pad_similarity
+from repro.core.preferences import make_preferences
+from repro.core.similarity import (
+    pairwise_similarity, set_preferences, stack_levels,
+)
+from repro.solver.config import SolveConfig
+from repro.solver.registry import auto_select, get_backend
+from repro.solver.result import RawBackendResult, SolveResult
+
+
+# ------------------------------------------------------------------ input
+def _normalize_input(data, cfg: SolveConfig):
+    """-> (points or None, similarity stack or None, original N)."""
+    arr = np.asarray(data) if not isinstance(data, jnp.ndarray) else data
+    if arr.ndim == 3:
+        if arr.shape[1] != arr.shape[2]:
+            raise ValueError(f"3-D input must be (L, N, N); got {arr.shape}")
+        if cfg.input_kind == "points":
+            raise ValueError("input_kind='points' requires a 2-D (N, d) array")
+        return None, jnp.asarray(arr), arr.shape[1]
+    if arr.ndim != 2:
+        raise ValueError(f"expected 2-D or 3-D input; got ndim={arr.ndim}")
+    kind = cfg.input_kind
+    if kind == "auto":
+        kind = "similarity" if arr.shape[0] == arr.shape[1] else "points"
+    if kind == "similarity":
+        if arr.shape[0] != arr.shape[1]:
+            raise ValueError(f"similarity matrix must be square; {arr.shape}")
+        return None, stack_levels(jnp.asarray(arr), cfg.levels), arr.shape[0]
+    return np.asarray(arr, np.float32), None, arr.shape[0]
+
+
+def _build_similarity(x: np.ndarray, cfg: SolveConfig, backend: str):
+    """Points -> (L, N, N) stack with preferences on the diagonal."""
+    xj = jnp.asarray(x)
+    if backend == "dense_fused" and cfg.metric == "neg_sqeuclidean":
+        # the fused path builds S with the Pallas similarity kernel too
+        from repro.kernels import ops
+        s = ops.neg_sqeuclidean(xj, block=cfg.block)
+    else:
+        s = pairwise_similarity(xj, metric=cfg.metric)
+    pref = cfg.preference
+    if pref is None:
+        return stack_levels(s, cfg.levels)
+    if isinstance(pref, str):
+        pref = make_preferences(s, pref, key=jax.random.PRNGKey(cfg.seed))
+    s = set_preferences(s, pref)
+    return stack_levels(s, cfg.levels)
+
+
+# ------------------------------------------------------------------- mesh
+def _factor_2d(ndev: int) -> tuple[int, int]:
+    rows = max(int(math.isqrt(ndev)), 1)
+    while ndev % rows:
+        rows -= 1
+    return rows, ndev // rows
+
+
+def _prepare_mesh(spec, cfg: SolveConfig):
+    """-> (mesh, pad multiple) for distributed backends."""
+    from repro.launch.mesh import make_worker_mesh
+    from repro.sharding.compat import make_mesh
+
+    mesh = cfg.mesh
+    if spec.mesh_kind == "1d":
+        if mesh is None:
+            mesh = make_worker_mesh()
+        # run_mrhap's collectives are written against these axis names
+        if tuple(mesh.axis_names) != ("workers",):
+            raise ValueError(
+                "mr1d backends need a 1-D mesh with axis 'workers' "
+                f"(got axes {tuple(mesh.axis_names)}); build one with "
+                "repro.launch.mesh.make_worker_mesh()")
+        multiple = mesh.shape["workers"]
+    else:  # "2d"
+        if mesh is None:
+            rows, cols = _factor_2d(len(jax.devices()))
+            mesh = make_mesh((rows, cols), ("rows", "cols"),
+                             devices=jax.devices()[: rows * cols])
+        if tuple(mesh.axis_names) != ("rows", "cols"):
+            raise ValueError(
+                "mr2d needs a 2-D mesh with axes ('rows', 'cols') "
+                f"(got axes {tuple(mesh.axis_names)})")
+        multiple = math.lcm(mesh.shape["rows"], mesh.shape["cols"])
+    if cfg.pad_to:
+        multiple = math.lcm(multiple, cfg.pad_to)
+    return mesh, multiple
+
+
+# ------------------------------------------------------------------ solve
+def solve(data, config: Optional[SolveConfig] = None,
+          **overrides: Any) -> SolveResult:
+    """Cluster ``data`` hierarchically with the configured backend.
+
+    ``data``: (N, d) points, (N, N) similarity matrix (diagonal =
+    preferences, caller-owned), or (L, N, N) per-level similarity stack.
+    Keyword overrides patch ``config`` field-by-field:
+    ``solve(x, backend="mr2d", max_iterations=80)``.
+    """
+    cfg = config or SolveConfig()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+
+    x, s3, n = _normalize_input(data, cfg)
+
+    backend = cfg.backend
+    if backend == "auto":
+        backend = auto_select(
+            n, cfg.levels, n_devices=len(jax.devices()),
+            has_points=x is not None, platform=jax.default_backend(),
+            cfg=cfg)
+    spec = get_backend(backend)
+
+    if spec.needs_points and x is None:
+        raise ValueError(
+            f"backend {backend!r} clusters raw points (it never builds the "
+            "global similarity matrix); pass an (N, d) array")
+    if cfg.stop == "converged" and not spec.supports_early_stop:
+        raise ValueError(
+            f"backend {backend!r} runs a fixed distributed sweep schedule "
+            "and does not support stop='converged'; use stop='fixed' or a "
+            "dense backend")
+
+    if spec.needs_points:
+        raw = spec.run(x, cfg)
+    else:
+        if s3 is None:
+            s3 = _build_similarity(x, cfg, backend)
+        if spec.mesh_kind:
+            mesh, multiple = _prepare_mesh(spec, cfg)
+            s3, _ = pad_similarity(s3, multiple)
+            raw = spec.run(s3, cfg.replace(mesh=mesh))
+        else:
+            raw = spec.run(s3, cfg)
+
+    return _finalize(raw, n, backend)
+
+
+def _finalize(raw: RawBackendResult, n: int, backend: str) -> SolveResult:
+    """Strip padding dummies, canonicalize, relabel, count clusters."""
+    e = np.asarray(raw.exemplars)[:, :n]
+    levels = e.shape[0]
+    # dummies repel real points, so a real point never selects one; after
+    # the strip every exemplar index is < n and canonicalization is closed.
+    e = canonicalize_levels(e)
+    labels = np.zeros_like(e, dtype=np.int32)
+    counts = np.zeros((levels,), np.int32)
+    for l in range(levels):
+        labels[l], counts[l] = dense_labels(e[l])
+    trace = (np.asarray(raw.trace, dtype=np.int32) if raw.trace is not None
+             else np.zeros((0,), np.int32))
+    return SolveResult(
+        exemplars=e.astype(np.int32), n_clusters=counts, labels=labels,
+        levels=levels, n=n, backend=backend, n_sweeps=int(raw.n_sweeps),
+        converged=raw.converged, trace=trace, state=raw.state)

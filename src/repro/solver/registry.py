@@ -1,0 +1,88 @@
+"""Backend registry + automatic backend selection.
+
+A backend is a function ``run(data, cfg) -> RawBackendResult`` plus
+capability flags the engine dispatches on. Registration is declarative so
+new execution strategies (sparse top-k, multi-host, GPU) plug in without
+touching the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.solver.config import (
+    DISTRIBUTED_THRESHOLD, STREAMING_THRESHOLD, SolveConfig,
+)
+from repro.solver.result import RawBackendResult
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    #: run(prepared_input, cfg) -> RawBackendResult. ``prepared_input`` is
+    #: an (L, N, N) similarity stack unless ``needs_points``, in which case
+    #: it is the raw (N, d) point array.
+    run: Callable[..., RawBackendResult]
+    #: None (single device) | "1d" | "2d" — engine builds/validates the
+    #: mesh and pads N to the mesh tile before calling ``run``.
+    mesh_kind: Optional[str] = None
+    #: backend consumes raw points, not a similarity tensor
+    needs_points: bool = False
+    #: backend honors cfg.stop == "converged" (lax.while_loop early exit)
+    supports_early_stop: bool = False
+    #: one-line description for docs/CLI listings
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec) -> BackendSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_backend(name: str) -> BackendSpec:
+    # importing backends lazily avoids import cycles and keeps
+    # `import repro.solver` cheap
+    from repro.solver import backends as _  # noqa: F401  (registers)
+    if name not in _REGISTRY:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown backend {name!r}; registered: {known}")
+    return _REGISTRY[name]
+
+
+def list_backends() -> Dict[str, BackendSpec]:
+    from repro.solver import backends as _  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def auto_select(n: int, levels: int, *, n_devices: int, has_points: bool,
+                platform: str, cfg: SolveConfig) -> str:
+    """Pick a backend from problem size and hardware (the local-vs-global
+    regime split of Xia et al.):
+
+    1. N past the quadratic-state budget and raw points available ->
+       ``sharded_streaming`` (O((N/S)^2) peak state);
+    2. multiple devices and N big enough to shard -> ``mr1d_stats`` (the
+       O(L*N) communication mode);
+    3. single device: ``dense_fused`` on TPU (Pallas hot path), else
+       ``dense_parallel`` (XLA-fused Jacobi sweeps).
+
+    ``stop="converged"`` restricts the choice to the dense family — the
+    streaming and distributed backends run fixed schedules and would
+    reject it. ``sharded_streaming`` is only auto-picked for single-level
+    requests (it collapses the hierarchy to one output level); a
+    multi-level request at huge N keeps the requested semantics and the
+    caller opts into streaming explicitly if one level is acceptable.
+    """
+    early = cfg.stop == "converged"
+    if has_points and n >= STREAMING_THRESHOLD and levels == 1 and not early:
+        return "sharded_streaming"
+    if (n_devices > 1 and n >= DISTRIBUTED_THRESHOLD and not early):
+        return "mr1d_stats"
+    if platform == "tpu":
+        return "dense_fused"
+    return "dense_parallel"

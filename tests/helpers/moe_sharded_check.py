@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers.moe import _moe_dense, moe_apply, moe_init
+from repro.sharding.compat import make_mesh, set_mesh
 
 
 def main() -> int:
@@ -20,9 +21,8 @@ def main() -> int:
         p, _ = moe_init(key, 32, 64, e)
         x = jax.random.normal(key, (4, 16, 32), jnp.float32) * 0.5
         dense = _moe_dense(p, x, top_k=2, capacity_factor=8.0)
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 2), ("data", "model"))
+        with set_mesh(mesh):
             sh = jax.jit(lambda p, x: moe_apply(
                 p, x, top_k=2, capacity_factor=8.0))(p, x)
         dy = float(jnp.max(jnp.abs(sh.y - dense.y)))

@@ -17,6 +17,7 @@ from repro.core import (
 from repro.core.mrhap import run_mrhap_2d
 from repro.core.preferences import median_preference
 from repro.data import gaussian_blobs
+from repro.sharding.compat import make_mesh
 
 
 def main() -> int:
@@ -25,8 +26,7 @@ def main() -> int:
     s = set_preferences(s, median_preference(s))
     s3 = stack_levels(s, 3)
     dense = run_hap(s3, iterations=25, damping=0.6, order="parallel")
-    mesh = jax.make_mesh((8,), ("workers",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("workers",))
     ok = True
     for mode in ("stats", "transpose"):
         dist = run_mrhap(s3, mesh, iterations=25, damping=0.6,
@@ -41,8 +41,7 @@ def main() -> int:
             ok = False
 
     # 2-D tile decomposition (rows x cols) — beyond the paper's M <= LN
-    mesh2d = jax.make_mesh((4, 2), ("rows", "cols"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2d = make_mesh((4, 2), ("rows", "cols"))
     dist2d = run_mrhap_2d(s3, mesh2d, iterations=25, damping=0.6)
     agree2d = float(np.mean(np.asarray(dist2d.exemplars)
                             == np.asarray(dense.exemplars)))

@@ -1,0 +1,39 @@
+"""Subprocess helper: solve() auto-padding + backend parity on 8 forced
+host devices. N=100 does not divide 8 workers — the engine must pad to
+104, run distributed, and strip the dummies. Exits nonzero on mismatch."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pairwise_similarity, set_preferences, stack_levels
+from repro.core.preferences import median_preference
+from repro.data import gaussian_blobs
+from repro.solver import solve
+
+
+def main() -> int:
+    x, _ = gaussian_blobs(n=100, k=4, seed=3, spread=0.4)
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s))
+    s3 = stack_levels(s, 3)
+
+    ref = solve(s3, backend="dense_parallel", max_iterations=25, damping=0.6)
+    ok = True
+    for backend in ("mr1d_stats", "mr1d_transpose", "mr2d"):
+        res = solve(s3, backend=backend, max_iterations=25, damping=0.6)
+        same = np.array_equal(res.exemplars, ref.exemplars)
+        in_range = int(res.exemplars.max()) < 100
+        print(f"{backend}: shape={res.exemplars.shape} "
+              f"identical={same} no_dummies={in_range}")
+        if res.exemplars.shape != (3, 100) or not same or not in_range:
+            ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,7 @@
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core.metrics import cluster_sizes, nmi, purity

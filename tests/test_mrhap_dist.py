@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,6 +15,7 @@ from repro.core import (
 )
 from repro.core.mrhap import run_mrhap_2d
 from repro.core.preferences import median_preference
+from repro.sharding.compat import make_mesh
 from repro.data import gaussian_blobs
 
 HELPER = os.path.join(os.path.dirname(__file__), "helpers",
@@ -40,8 +40,7 @@ def test_single_worker_mesh_equals_dense():
     s = set_preferences(s, median_preference(s))
     s3 = stack_levels(s, 2)
     dense = run_hap(s3, iterations=15, damping=0.5, order="parallel")
-    mesh = jax.make_mesh((1,), ("workers",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("workers",))
     for mode in ("stats", "transpose"):
         dist = run_mrhap(s3, mesh, iterations=15, damping=0.5,
                          comm_mode=mode)
@@ -55,8 +54,7 @@ def test_single_worker_mesh_equals_dense():
 
 def test_indivisible_n_raises():
     s3 = jnp.zeros((2, 10, 10))
-    mesh = jax.make_mesh((1,), ("workers",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("workers",))
     # 10 % 1 == 0 fine; fake worker count via pad_similarity contract instead
     s3p, n0 = pad_similarity(s3, 4)
     assert s3p.shape[1] == 12 and n0 == 10
@@ -76,8 +74,7 @@ def test_mrhap_2d_degenerate_mesh_equals_dense():
     s = set_preferences(s, median_preference(s))
     s3 = stack_levels(s, 2)
     dense = run_hap(s3, iterations=15, damping=0.5, order="parallel")
-    mesh = jax.make_mesh((1, 1), ("rows", "cols"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("rows", "cols"))
     dist = run_mrhap_2d(s3, mesh, iterations=15, damping=0.5)
     np.testing.assert_allclose(np.asarray(dist.r),
                                np.asarray(dense.state.r),

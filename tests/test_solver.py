@@ -1,0 +1,203 @@
+"""Unified solver engine: backend parity, auto-padding, early stopping.
+
+Parity contract (docs/solver.md): every backend implementing the paper's
+§3 Jacobi schedule — dense_parallel, dense_fused, mr1d_stats,
+mr1d_transpose, mr2d — must produce bit-identical exemplar sets on a
+shared (L=3, N=96) fixture. dense_sequential implements Alg. 1 as printed
+(Gauss-Seidel): for L=1 the two schedules are provably the same recurrence
+and must agree exactly; for L>1 they are different fixed-point iterations
+and are compared on clustering quality. sharded_streaming is a two-tier
+approximation with a documented quality tolerance.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    pairwise_similarity, purity, set_preferences, stack_levels,
+)
+from repro.core.preferences import median_preference
+from repro.data import gaussian_blobs
+from repro.solver import SolveConfig, list_backends, solve
+
+JACOBI = ["dense_parallel", "dense_fused", "mr1d_stats", "mr1d_transpose",
+          "mr2d"]
+ALL_SIX = ["dense_sequential"] + JACOBI + ["sharded_streaming"]
+
+
+def _stack(x, levels=3, pref_scale=1.0):
+    s = pairwise_similarity(jnp.asarray(x))
+    s = set_preferences(s, median_preference(s) * pref_scale)
+    return stack_levels(s, levels)
+
+
+@pytest.fixture(scope="module")
+def fixture96():
+    x, y = gaussian_blobs(n=96, k=4, seed=6, spread=0.4)
+    return x, y, _stack(x)
+
+
+@pytest.fixture(scope="module")
+def reference96(fixture96):
+    _, _, s3 = fixture96
+    return solve(s3, backend="dense_parallel", max_iterations=30,
+                 damping=0.6)
+
+
+def test_registry_covers_all_backends():
+    assert set(ALL_SIX) <= set(list_backends())
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("backend", JACOBI)
+def test_jacobi_family_bit_identical(fixture96, reference96, backend):
+    _, _, s3 = fixture96
+    res = solve(s3, backend=backend, max_iterations=30, damping=0.6)
+    assert res.backend == backend
+    np.testing.assert_array_equal(res.exemplars, reference96.exemplars)
+    np.testing.assert_array_equal(res.n_clusters, reference96.n_clusters)
+
+
+def test_sequential_equals_parallel_at_single_level(fixture96):
+    """L=1 collapses Gauss-Seidel and Jacobi to the same recurrence."""
+    x, _, _ = fixture96
+    s3 = _stack(x, levels=1)
+    seq = solve(s3, backend="dense_sequential", max_iterations=30,
+                damping=0.6)
+    par = solve(s3, backend="dense_parallel", max_iterations=30, damping=0.6)
+    np.testing.assert_array_equal(seq.exemplars, par.exemplars)
+
+
+def test_sequential_matches_quality_at_three_levels(fixture96, reference96):
+    """L>1: different sweep orders are different fixed-point iterations
+    (documented); both must still resolve the blob structure."""
+    x, y, s3 = fixture96
+    seq = solve(s3, backend="dense_sequential", max_iterations=30,
+                damping=0.6)
+    assert purity(seq.labels[0], y) > 0.9
+    assert purity(reference96.labels[0], y) > 0.9
+
+
+def test_streaming_tolerance(fixture96, reference96):
+    """sharded_streaming sees only shard-local similarities: single output
+    level, cluster structure within quality tolerance of the dense run."""
+    x, y, _ = fixture96
+    res = solve(x, backend="sharded_streaming", shard_size=48,
+                max_iterations=60, pref_scale=0.25)
+    assert res.levels == 1 and res.exemplars.shape == (1, 96)
+    assert purity(res.labels[0], y) > 0.9
+
+
+# ------------------------------------------------------------ auto-padding
+def test_auto_padding_round_trip_indivisible_n(tmp_path):
+    """N=100 forced to an 8-multiple: engine pads to 104, dummies never
+    leak into results, exemplars equal the unpadded dense run."""
+    x, _ = gaussian_blobs(n=100, k=4, seed=3, spread=0.4)
+    s3 = _stack(x)
+    ref = solve(s3, backend="dense_parallel", max_iterations=25, damping=0.6)
+    res = solve(s3, backend="mr1d_stats", max_iterations=25, damping=0.6,
+                pad_to=8)
+    assert res.n == 100 and res.exemplars.shape == (3, 100)
+    assert int(res.exemplars.max()) < 100      # no dummy ever selected
+    np.testing.assert_array_equal(res.exemplars, ref.exemplars)
+    np.testing.assert_array_equal(res.n_clusters, ref.n_clusters)
+
+
+@pytest.mark.slow
+def test_padding_on_real_8_worker_mesh():
+    """The same round trip on 8 forced host devices (subprocess so the
+    device count never leaks into this session)."""
+    helper = os.path.join(os.path.dirname(__file__), "helpers",
+                          "solver_dist_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, helper], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------ early stop
+def test_converged_stops_before_budget(fixture96):
+    x, _, _ = fixture96
+    s3 = _stack(x, pref_scale=2.0)
+    res = solve(s3, backend="dense_parallel", stop="converged",
+                max_iterations=300, patience=10)
+    assert res.converged is True
+    assert res.n_sweeps < 300
+    # trace records per-sweep assignment changes; the tail is the stable run
+    assert res.trace.shape == (res.n_sweeps,)
+    assert np.all(res.trace[-10:] == 0)
+    # fixed-budget run over the same data agrees on the final assignment
+    ref = solve(s3, backend="dense_parallel", max_iterations=res.n_sweeps)
+    np.testing.assert_array_equal(res.exemplars, ref.exemplars)
+
+
+def test_converged_respects_budget(fixture96):
+    _, _, s3 = fixture96
+    res = solve(s3, backend="dense_parallel", stop="converged",
+                max_iterations=4, patience=100)
+    assert res.converged is False and res.n_sweeps == 4
+
+
+def test_converged_rejected_by_fixed_schedule_backends(fixture96):
+    _, _, s3 = fixture96
+    with pytest.raises(ValueError, match="fixed distributed sweep"):
+        solve(s3, backend="mr1d_stats", stop="converged")
+
+
+# ------------------------------------------------------------ input modes
+def test_points_input_builds_similarity(fixture96):
+    x, y, s3 = fixture96
+    from_points = solve(x, backend="dense_parallel", max_iterations=30,
+                        damping=0.6, levels=3, preference="median")
+    from_stack = solve(s3, backend="dense_parallel", max_iterations=30,
+                       damping=0.6)
+    np.testing.assert_array_equal(from_points.exemplars,
+                                  from_stack.exemplars)
+
+
+def test_fused_points_input_uses_kernel_similarity(fixture96):
+    x, _, _ = fixture96
+    fused = solve(x, backend="dense_fused", max_iterations=20, damping=0.6)
+    par = solve(x, backend="dense_parallel", max_iterations=20, damping=0.6)
+    np.testing.assert_array_equal(fused.exemplars, par.exemplars)
+
+
+def test_streaming_requires_points(fixture96):
+    _, _, s3 = fixture96
+    with pytest.raises(ValueError, match="raw points"):
+        solve(s3, backend="sharded_streaming")
+
+
+def test_config_object_and_overrides(fixture96):
+    _, _, s3 = fixture96
+    cfg = SolveConfig(backend="dense_parallel", max_iterations=10)
+    a = solve(s3, cfg)
+    b = solve(s3, cfg, max_iterations=10)   # override is a no-op here
+    np.testing.assert_array_equal(a.exemplars, b.exemplars)
+    assert a.n_sweeps == 10
+
+
+def test_auto_select_converged_stays_dense():
+    """stop='converged' must never route to a fixed-schedule backend,
+    whatever the problem size or device count."""
+    from repro.solver import auto_select
+    cfg = SolveConfig(stop="converged")
+    for n, ndev, pts in [(8300, 1, True), (8300, 8, True), (512, 8, False)]:
+        picked = auto_select(n, 3, n_devices=ndev, has_points=pts,
+                             platform="cpu", cfg=cfg)
+        assert picked.startswith("dense_")
+
+
+def test_auto_backend_single_device(fixture96):
+    x, _, _ = fixture96
+    res = solve(x, max_iterations=15)
+    # one CPU device in this session -> dense family
+    assert res.backend in ("dense_parallel", "dense_fused")
+    assert res.trace.shape == (15,)
