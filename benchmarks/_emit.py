@@ -1,0 +1,42 @@
+"""Machine-readable benchmark records.
+
+Every bench main() calls ``emit(name, rows)`` after printing its CSV
+lines, writing ``BENCH_<name>.json`` in the working directory. The
+nightly workflow uploads these as artifacts (the perf trajectory), and
+``check_regression.py`` gates PR runs against the committed
+``baseline_smoke.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+
+def emit(name: str, rows: list, meta: dict | None = None,
+         out_dir: str = ".") -> str:
+    """Write BENCH_<name>.json: {"bench", "rows", "meta"}; returns path."""
+    try:
+        import jax
+        backend = jax.default_backend()
+        n_devices = len(jax.devices())
+    except Exception:  # bench records must never die on metadata
+        backend, n_devices = "unknown", 0
+    rec = {
+        "bench": name,
+        "rows": rows,
+        "meta": {
+            "unix_time": int(time.time()),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "jax_backend": backend,
+            "n_devices": n_devices,
+            **(meta or {}),
+        },
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    print(f"[bench] wrote {path} ({len(rows)} rows)")
+    return path

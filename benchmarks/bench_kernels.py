@@ -10,10 +10,13 @@ Pallas responsibility/availability kernels wired into the per-level HAP
 hot loop) against the jnp ``dense_parallel`` sweep — on CPU the fused
 column measures interpret-mode overhead; on TPU it is the headline number.
 
-    PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke]
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke] [--json P]
 
 ``--smoke`` shrinks sizes/reps so CI can run the whole file in seconds
-and still catch compile regressions in every kernel.
+and still catch compile regressions in every kernel. Every run also
+writes a machine-readable ``BENCH_kernels.json`` (``--json`` overrides
+the path) that ``check_regression.py`` gates against the committed
+``benchmarks/baseline_smoke.json``.
 """
 from __future__ import annotations
 
@@ -25,6 +28,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+
+try:
+    from benchmarks._emit import emit
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from _emit import emit
 
 
 def _time(fn, *args, reps=5):
@@ -80,9 +88,11 @@ def run(n: int = 1024, reps: int = 5, sweep_n: int = 256,
 
 def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
     """dense_fused (Pallas kernels in the hot loop) vs dense_parallel
-    (jnp sweeps) through the one solver driver both backends share."""
+    (jnp sweeps) vs dense_topk (compressed layout) through the one
+    stopping-rule driver all three share."""
     from repro.data import gaussian_blobs
     from repro.solver.dense import run_dense
+    from repro.solver.topk import build_from_points, run_topk
 
     x, _ = gaussian_blobs(n=n, k=5, seed=0)
     from repro.core.preferences import median_preference
@@ -102,6 +112,22 @@ def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
         t = _time(fn, s3, reps=reps) / iters
         rows.append({"name": f"hap_sweep_{order}_n{n}", "us": t * 1e6,
                      "flops": flops, "bytes": bytes_})
+
+    # sparse top-k: same schedule on the (N, k+1) compressed layout
+    k = min(32, n - 1)
+    xj = jnp.asarray(x)
+    build = lambda x_: build_from_points(x_, k, 3)[0]
+    t = _time(build, xj, reps=reps)
+    rows.append({"name": f"topk_build_n{n}_k{k}", "us": t * 1e6,
+                 "flops": 2 * n * n * x.shape[1],
+                 "bytes": (n * x.shape[1] + n * k) * 4})
+    s3k, idx = build_from_points(xj, k, 3)
+    fn = lambda s3k_: run_topk(s3k_, idx, max_iterations=iters,
+                               damping=0.6)[1]
+    t = _time(fn, s3k, reps=reps) / iters
+    rows.append({"name": f"hap_sweep_topk_n{n}_k{k}", "us": t * 1e6,
+                 "flops": 2 * 4 * 3 * n * (k + 1),
+                 "bytes": 2 * 4 * 3 * n * (k + 1) * 4})
     return rows
 
 
@@ -109,15 +135,24 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes / 1 rep: CI compile-regression check")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="override the BENCH_kernels.json output path")
     args = ap.parse_args(argv)
     if args.smoke:
-        rows = run(n=128, reps=1, sweep_n=96, sweep_iters=2)
+        # reps=3 and non-tiny sizes: single-rep sub-millisecond timings
+        # flap 2-3x run-to-run on shared runners, which would flake the
+        # regression gate (it only arms on rows above its --min-us floor)
+        rows = run(n=256, reps=3, sweep_n=192, sweep_iters=2)
     else:
         rows = run()
     for r in rows:
         ai = r["flops"] / r["bytes"]
         print(f"kernel_{r['name']},{r['us']:.0f},"
               f"flops={r['flops']:.2e} ai={ai:.2f}")
+    path = emit("kernels", rows, meta={"smoke": args.smoke})
+    if args.json and args.json != path:
+        import shutil
+        shutil.copy(path, args.json)
     return rows
 
 

@@ -1,10 +1,13 @@
-"""Fig 4.3 analogue: MR-HAP runtime & communication vs worker count.
+"""Fig 4.3 analogue + the beyond-paper single-device N sweep.
 
-The paper scales EC2 VMs 1..80 and shows MR-HAP hitting linear-in-data
-runtime. This container has ONE physical core, so wall-clock over forced
-host devices measures overhead, not speedup; the bench therefore reports
-BOTH measured wall time and the two analytic scaling columns the paper's
-figure is about:
+Two suites, both recorded into ``BENCH_scaling.json``:
+
+``mrhap`` — the paper's figure: MR-HAP runtime & communication vs worker
+count. The paper scales EC2 VMs 1..80 and shows MR-HAP hitting
+linear-in-data runtime. This container has ONE physical core, so
+wall-clock over forced host devices measures overhead, not speedup; the
+bench therefore reports BOTH measured wall time and the two analytic
+scaling columns the paper's figure is about:
 
   work_per_worker = k * L * N^2 / W      (O(kN) as W -> LN, paper §3.1)
   comm_bytes      = per-iteration cluster traffic for the paper-faithful
@@ -12,6 +15,14 @@ figure is about:
 
 Workers run in subprocesses (benchmarks/_scaling_worker.py) so each sees
 its own forced device count.
+
+``topk`` — dense vs sparse single-device scaling out to N = 2*10^5: the
+dense backends stop at the quadratic-state budget (rows past the cap are
+recorded as ``skipped``: 3 * L * N^2 f32 message tensors at N = 2e5
+would be ~1 TB); ``dense_topk`` keeps O(L*N*k) state and runs the full
+range — the paper's linear-complexity headline realized on one device.
+
+    PYTHONPATH=src python benchmarks/bench_scaling.py [--tier smoke|full]
 """
 from __future__ import annotations
 
@@ -19,10 +30,21 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 from repro.core.mrhap import comm_bytes_per_iteration
 
+try:
+    from benchmarks._emit import emit
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from _emit import emit
+
 WORKER = os.path.join(os.path.dirname(__file__), "_scaling_worker.py")
+
+#: N above which the dense O(L*N^2) backends are skipped (not attempted):
+#: at 8192 the three (2, N, N) f32 message tensors already take ~1.6 GB;
+#: the topk rows keep going.
+DENSE_STATE_CAP = 4096
 
 
 def run(n: int = 512, levels: int = 3, iterations: int = 20,
@@ -50,13 +72,71 @@ def run(n: int = 512, levels: int = 3, iterations: int = 20,
     return rows
 
 
-def main():
-    rows = run()
-    for r in rows:
+def run_topk_scaling(sizes=(1024, 4096, 16384, 65536, 200_000), k: int = 32,
+                     levels: int = 2, iterations: int = 15,
+                     dense_cap: int = DENSE_STATE_CAP) -> list:
+    """Dense vs sparse single-device N sweep (the ``topk`` suite)."""
+    from repro.data import gaussian_blobs
+    from repro.solver import solve
+
+    rows = []
+    for n in sizes:
+        x, _ = gaussian_blobs(n=n, k=16, seed=0, spread=0.5)
+        for backend in ("dense_parallel", "dense_topk"):
+            base = {"suite": "topk", "backend": backend, "n": n,
+                    "levels": levels, "iterations": iterations}
+            if backend == "dense_parallel":
+                base["state_bytes"] = 3 * levels * n * n * 4
+                if n > dense_cap:
+                    rows.append({**base, "status": "skipped",
+                                 "reason": "O(L*N^2) message state past "
+                                           "the single-device budget"})
+                    continue
+                kw = {}
+            else:
+                base["k"] = k
+                base["state_bytes"] = 3 * levels * n * (k + 1) * 4
+                kw = {"k": k}
+            t0 = time.time()
+            res = solve(x, backend=backend, levels=levels,
+                        max_iterations=iterations, damping=0.7,
+                        preference="median", **kw)
+            rows.append({**base, "status": "ok",
+                         "wall_s": time.time() - t0,
+                         "n_clusters_l0": int(res.n_clusters[0])})
+    return rows
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tier", choices=("smoke", "full"), default="full",
+                    help="smoke: CI/nightly-sized rows; full: the paper-"
+                         "scale sweep incl. the N=2e5 topk row")
+    args = ap.parse_args(argv)
+    if args.tier == "smoke":
+        mr_rows = run(n=256, iterations=10, worker_counts=(1, 2))
+        topk_rows = run_topk_scaling(sizes=(512, 2048, 4096), k=16,
+                                     iterations=10, dense_cap=2048)
+    else:
+        mr_rows = run()
+        topk_rows = run_topk_scaling()
+    for r in mr_rows:
+        r["suite"] = "mrhap"
         print(f"mrhap_scaling_{r['mode']}_w{r['workers']},"
               f"{r['wall_s'] * 1e6 / r['iterations']:.0f},"
               f"work/W={r['work_per_worker']} "
               f"comm={r['comm_bytes_iter']}B k={r['k_level0']}")
+    for r in topk_rows:
+        if r["status"] == "ok":
+            print(f"scaling_{r['backend']}_n{r['n']},"
+                  f"{r['wall_s'] * 1e6 / r['iterations']:.0f},"
+                  f"state={r['state_bytes']}B k_l0={r['n_clusters_l0']}")
+        else:
+            print(f"scaling_{r['backend']}_n{r['n']},skipped,"
+                  f"state={r['state_bytes']}B ({r['reason']})")
+    rows = mr_rows + topk_rows
+    emit("scaling", rows, meta={"tier": args.tier})
     return rows
 
 

@@ -1,0 +1,112 @@
+"""PR perf gate: compare a BENCH_kernels.json against the committed
+baseline and fail on >2x slowdown of any timed row.
+
+    python benchmarks/check_regression.py BENCH_kernels.json \
+        benchmarks/baseline_smoke.json [--max-ratio 2.0] [--min-us 3000]
+
+Rows are matched by ``name``. A row is gated only when its baseline
+time is at least ``--min-us`` (sub-millisecond rows are timing noise on
+shared CI runners). Because the baseline was recorded on a different
+machine than the CI runner, each row's slowdown is normalized by the
+*median* slowdown across all rows before gating: a uniformly slower
+runner shifts every row equally and cancels out, while a single kernel
+regressing stands out against the fleet (``--no-normalize`` restores
+raw ratios). A baseline row missing from the current run fails too —
+silently dropping a kernel from the bench is itself a regression. The
+comparison table goes to stdout and, when ``$GITHUB_STEP_SUMMARY`` is
+set, to the job summary — on success and on failure alike.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rec = json.load(f)
+    return {r["name"]: r for r in rec["rows"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_kernels.json from this run")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when normalized current/baseline exceeds "
+                         "this")
+    ap.add_argument("--min-us", type=float, default=3000.0,
+                    help="ignore rows whose baseline is below this")
+    ap.add_argument("--no-normalize", action="store_true",
+                    help="gate on raw ratios (same-machine comparisons)")
+    args = ap.parse_args(argv)
+
+    cur = load_rows(args.current)
+    base = load_rows(args.baseline)
+
+    ratios = {name: cur[name]["us"] / max(b["us"], 1e-9)
+              for name, b in base.items() if name in cur}
+    machine = 1.0
+    if ratios and not args.no_normalize:
+        # calibrate only on rows the gate itself trusts (>= min-us):
+        # sub-floor rows are declared timing noise and must not rescale
+        # the gated rows' verdicts
+        trusted = [r for name, r in ratios.items()
+                   if base[name]["us"] >= args.min_us] or list(
+                       ratios.values())
+        ordered = sorted(trusted)
+        mid = len(ordered) // 2
+        machine = (ordered[mid] if len(ordered) % 2 else
+                   0.5 * (ordered[mid - 1] + ordered[mid]))
+        machine = max(machine, 1e-9)
+
+    lines = ["| kernel | baseline us | current us | ratio | adjusted "
+             "| verdict |",
+             "|---|---|---|---|---|---|"]
+    failures = []
+    for name, b in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{name}: missing from current run")
+            lines.append(f"| {name} | {b['us']:.0f} | — | — | — "
+                         f"| MISSING |")
+            continue
+        ratio = ratios[name]
+        adj = ratio / machine
+        gated = b["us"] >= args.min_us
+        bad = gated and adj > args.max_ratio
+        verdict = ("FAIL" if bad else
+                   "ok" if gated else "ok (below min-us, not gated)")
+        if bad:
+            failures.append(
+                f"{name}: {adj:.2f}x normalized slowdown "
+                f"({b['us']:.0f}us -> {cur[name]['us']:.0f}us, "
+                f"machine factor {machine:.2f})")
+        lines.append(f"| {name} | {b['us']:.0f} | {cur[name]['us']:.0f} "
+                     f"| {ratio:.2f}x | {adj:.2f}x | {verdict} |")
+    for name in sorted(set(cur) - set(base)):
+        lines.append(f"| {name} | — | {cur[name]['us']:.0f} | — | — "
+                     f"| new (no baseline) |")
+
+    table = "\n".join(lines)
+    header = (f"## Kernel bench vs baseline (gate: >"
+              f"{args.max_ratio:g}x on rows ≥ {args.min_us:g}us, "
+              f"machine factor {machine:.2f})\n")
+    print(header + table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(header + table + "\n")
+
+    if failures:
+        print("\nperf regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nperf regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,7 +31,7 @@ def main(argv=None) -> int:
         bench_purity.main()
     if "kernels" in wanted:
         from benchmarks import bench_kernels
-        bench_kernels.main()
+        bench_kernels.main([])
     if "scaling" in wanted:
         from benchmarks import bench_scaling
         if args.fast:
@@ -42,7 +42,7 @@ def main(argv=None) -> int:
                       f"{r['wall_s'] * 1e6 / r['iterations']:.0f},"
                       f"comm={r['comm_bytes_iter']}B")
         else:
-            bench_scaling.main()
+            bench_scaling.main([])
     if "roofline" in wanted:
         from benchmarks import roofline
         roofline.main()

@@ -151,32 +151,58 @@ def hap_sweep_sequential(
     return HAPState(s, r, a, tau, phi, c)
 
 
+class SweepReducers(NamedTuple):
+    """The O(N)-output inter-level reductions a Jacobi sweep needs, each
+    operating on level-stacked arrays. ``jacobi_sweep`` defaults to the
+    dense (L, N, N) set below; the sparse top-k path injects the
+    ``repro.kernels.topk_ops`` equivalents (closing over its index
+    layout) so both share one schedule-defining sweep body."""
+    tau: object      # (r[:-1], c[:-1]) -> (L-1, N)   Eq 2.4
+    phi: object      # (a[1:], s[1:])   -> (L-1, N)   Eq 2.5
+    c: object        # (a, r)           -> (L, N)     Eq 2.6
+    s_next: object   # (s[1:], a[:-1], r[:-1], kappa, mode) -> (L-1, ...)
+
+
+def _dense_reducers() -> SweepReducers:
+    return SweepReducers(
+        tau=jax.vmap(tau_from_level),
+        phi=jax.vmap(phi_from_level),
+        c=jax.vmap(c_update),
+        s_next=lambda s_up, a, r, kappa, mode: jax.vmap(
+            functools.partial(s_next_level, kappa=kappa, mode=mode)
+        )(s_up, a, r))
+
+
 def jacobi_sweep(
     state: HAPState, first_iter, *, lam: float, kappa: float,
     s_mode: SUpdateMode, update_r, update_a,
+    reducers: SweepReducers | None = None,
 ) -> HAPState:
     """One MR-schedule iteration (§3) with injected tensor updates.
 
     The inter-level scaffolding — tau/c gated on ``first_iter`` (§3.0.1),
     phi from the previous iteration's alpha, the optional Eq 2.7
-    similarity refinement — is schedule-defining and shared; only the two
-    heavy O(L*N^2) updates vary by backend:
+    similarity refinement — is schedule-defining and shared; the two
+    heavy per-entry updates vary by backend:
 
-        update_r(s, a, tau, r_old) -> damped rho   (stacked (L, N, N))
+        update_r(s, a, tau, r_old) -> damped rho   (level-stacked)
         update_a(r, c, phi, a_old) -> damped alpha
 
     ``hap_sweep_parallel`` injects the jnp reference pair; the solver's
-    ``dense_fused`` backend injects the Pallas kernel pair. One body
-    keeps the two bit-for-bit comparable by construction.
+    ``dense_fused`` backend injects the Pallas kernel pair; the sparse
+    ``dense_topk`` backend injects compressed-layout updates plus its
+    ``reducers``. One body keeps them numerically comparable by
+    construction — the dense reductions are the default.
     """
+    red = reducers if reducers is not None else _dense_reducers()
     s, r, a = state.s, state.r, state.a
     tau, phi, c = state.tau, state.phi, state.c
 
     # --- Job 1 ---------------------------------------------------------
     # tau^{l+1} from level l's previous-iteration rho/c; tau[0] stays +inf.
-    tau_new = jax.vmap(tau_from_level)(r[:-1], c[:-1])          # (L-1, N)
+    tau_new = red.tau(r[:-1], c[:-1])                           # (L-1, N)
     tau_new = jnp.concatenate([tau[:1], tau_new], axis=0)
-    c_new = jax.vmap(c_update)(a, r)                            # (L, N)
+    c_new = red.c(a, r)                                         # (L, N)
     keep = jnp.asarray(first_iter)
     tau = jnp.where(keep, tau, tau_new)
     c = jnp.where(keep, c, c_new)
@@ -184,14 +210,12 @@ def jacobi_sweep(
 
     # --- Job 2 ---------------------------------------------------------
     # phi^{l-1} from level l's alpha (previous iteration); phi[L-1] stays 0.
-    phi_new = jax.vmap(phi_from_level)(a[1:], s[1:])            # (L-1, N)
+    phi_new = red.phi(a[1:], s[1:])                             # (L-1, N)
     phi = jnp.concatenate([phi_new, phi[-1:]], axis=0)
     a = update_a(r, c, phi, a)
 
     if s_mode != "off":
-        s_upd = jax.vmap(
-            functools.partial(s_next_level, kappa=kappa, mode=s_mode)
-        )(s[1:], a[:-1], r[:-1])
+        s_upd = red.s_next(s[1:], a[:-1], r[:-1], kappa, s_mode)
         s = jnp.concatenate([s[:1], s_upd], axis=0)
     return HAPState(s, r, a, tau, phi, c)
 

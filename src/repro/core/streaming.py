@@ -11,7 +11,10 @@ wall, the natural 1000-node-scale extension (DESIGN §8):
   exemplar-level  : cluster the union of shard exemplars with (H)AP —
                     a second tier exactly like the paper's hierarchy,
                     except the lower tier never built a global matrix;
-  assignment      : each point inherits its shard exemplar's cluster.
+  assignment      : each point inherits its shard exemplar's cluster,
+                    then a second pass reassigns every point to its
+                    nearest *global* exemplar — shard-local exemplar
+                    choices stop leaking into final assignments.
 
 State drops from O(N^2) to O((N/S)^2 + E^2); with S ~ sqrt(N) shards this
 is O(N). The quality trade (local exemplars only see their shard) is the
@@ -82,8 +85,25 @@ def streaming_hap(
 
     final_exemplar = np.asarray(
         [top_of[int(e)] for e in shard_exemplar_of])
-    uniq, labels = np.unique(final_exemplar, return_inverse=True)
-    return StreamingResult(labels.astype(np.int32), x[uniq],
+    uniq = np.unique(final_exemplar)
+
+    # ---- second assignment pass: once the *global* exemplar set is
+    # known, reassign every point to its nearest global exemplar. Tier-1
+    # exemplars only ever saw their own shard, so inherited assignments
+    # are hostage to the shard draw; this one cheap O(N * K) pass closes
+    # most of that purity gap. Each exemplar is at distance 0 from
+    # itself, so the exemplar set (and n_clusters) is unchanged.
+    ex_pts = x[uniq]                                       # (K, d)
+    ex_sq = (ex_pts ** 2).sum(1)[None, :]
+    labels = np.empty(n, np.int32)
+    for lo in range(0, n, 4096):                           # O(chunk * K) peak
+        chunk = x[lo:lo + 4096]
+        # ||c - e||^2 via the matmul identity: no (chunk, K, d) broadcast
+        d2 = ((chunk ** 2).sum(1)[:, None] + ex_sq
+              - 2.0 * chunk @ ex_pts.T)
+        labels[lo:lo + 4096] = np.argmin(d2, axis=1)
+    final_exemplar = uniq[labels]
+    return StreamingResult(labels, x[uniq],
                            shard_exemplar_of, len(uniq),
                            final_exemplar.astype(np.int32))
 

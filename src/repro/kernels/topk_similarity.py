@@ -1,0 +1,126 @@
+"""Tiled top-k-per-row similarity build — the sparse layout's front door.
+
+The dense builders materialize the full (N, N) matrix; past N ~ 10^4 that
+is the memory wall. This pass streams (block_rows, block_cols) similarity
+tiles and folds each into a running per-row top-k, so peak state is
+O(block_rows * block_cols + N * k) and the N x N matrix never exists.
+
+Output layout (shared by every ``repro.kernels.topk_ops`` consumer):
+
+    vals (N, k) f32   top-k *off-diagonal* similarities per row
+    idx  (N, k) i32   their column indices, sorted ascending per row
+
+The diagonal (preference) is excluded here and carried as the dedicated
+"self" slot the solver prepends (``repro.solver.topk``); index-ascending
+order makes the layout deterministic (independent of tile traversal) and
+keeps gathers cache-coherent.
+
+Per-tile similarity runs through the same metric formulas as the dense
+builder (bitwise-identical per element — blocking only partitions the
+output, it never re-associates a per-element reduction), with the Pallas
+similarity kernel on TPU for ``neg_sqeuclidean`` and jnp elsewhere, the
+repo's usual native-on-TPU / jnp-on-host split.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.similarity import _METRICS
+
+NEG_INF = float("-inf")
+
+
+def _block_similarity(xr, xc, metric: str, use_pallas: bool):
+    if use_pallas and metric == "neg_sqeuclidean":
+        from repro.kernels.similarity import similarity_pallas
+        return similarity_pallas(xr, xc)
+    return _METRICS[metric](xr, xc)
+
+
+def _merge_topk(carry, blk_vals, blk_cols, k):
+    """Fold a (B, C) tile into the running (B, k) top-k."""
+    vals, idx = carry
+    cand_v = jnp.concatenate([vals, blk_vals], axis=1)
+    cand_i = jnp.concatenate([idx, blk_cols], axis=1)
+    top_v, pos = jax.lax.top_k(cand_v, k)
+    top_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    return top_v, top_i
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "block_rows", "block_cols",
+                     "use_pallas"))
+def topk_similarity(
+    x: jnp.ndarray,
+    k: int,
+    *,
+    metric: str = "neg_sqeuclidean",
+    block_rows: int = 1024,
+    block_cols: int = 4096,
+    use_pallas: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, d) points -> (vals (N, k), idx (N, k)) off-diagonal top-k.
+
+    ``k`` must satisfy ``1 <= k <= N - 1``; at ``k = N - 1`` the output
+    is the full off-diagonal similarity set (lossless) and downstream
+    sparse sweeps reproduce the dense recurrence exactly.
+    """
+    n, _ = x.shape
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"k must be in [1, N-1] = [1, {n - 1}]; got {k}")
+    br = min(block_rows, n)
+    bc = min(block_cols, n)
+    pr, pc = (-n) % br, (-n) % bc
+    xr = jnp.pad(x, ((0, pr), (0, 0))) if pr else x
+    n_rt, n_ct = xr.shape[0] // br, (n + pc) // bc
+    col_pad = jnp.pad(x, ((0, pc), (0, 0))) if pc else x
+
+    def row_tile(args):
+        tile, r0 = args                                # (br, d), scalar
+        rows = r0 + jnp.arange(br)
+
+        def fold(carry, c0):
+            s_blk = _block_similarity(
+                tile, jax.lax.dynamic_slice_in_dim(col_pad, c0, bc),
+                metric, use_pallas)                    # (br, bc)
+            cols = c0 + jnp.arange(bc)
+            # mask the diagonal (self) and any padded phantom column
+            dead = (cols[None, :] == rows[:, None]) | (cols[None, :] >= n)
+            s_blk = jnp.where(dead, NEG_INF, s_blk)
+            blk_cols = jnp.broadcast_to(cols[None, :], s_blk.shape)
+            return _merge_topk(carry, s_blk, blk_cols, k), None
+
+        init = (jnp.full((br, k), NEG_INF, jnp.float32),
+                jnp.zeros((br, k), jnp.int32))
+        (vals, idx), _ = jax.lax.scan(
+            fold, init, jnp.arange(n_ct, dtype=jnp.int32) * bc)
+        # deterministic layout: neighbors in ascending column order
+        order = jnp.argsort(idx, axis=1)
+        return (jnp.take_along_axis(vals, order, axis=1),
+                jnp.take_along_axis(idx, order, axis=1))
+
+    tiles = xr.reshape(n_rt, br, x.shape[1])
+    starts = (jnp.arange(n_rt, dtype=jnp.int32) * br)
+    vals, idx = jax.lax.map(row_tile, (tiles, starts))
+    return (vals.reshape(-1, k)[:n].astype(jnp.float32),
+            idx.reshape(-1, k)[:n].astype(jnp.int32))
+
+
+def topk_from_dense(s: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Compress an existing dense (N, N) similarity matrix to the top-k
+    layout (diagonal excluded — it is the preference slot). Used when a
+    caller hands the solver a precomputed matrix; the build-from-points
+    path should be preferred since it never materializes N x N."""
+    n = s.shape[-1]
+    if not 1 <= k <= n - 1:
+        raise ValueError(f"k must be in [1, N-1] = [1, {n - 1}]; got {k}")
+    eye = jnp.eye(n, dtype=bool)
+    off = jnp.where(eye, NEG_INF, s)
+    vals, idx = jax.lax.top_k(off, k)
+    order = jnp.argsort(idx, axis=1)
+    return (jnp.take_along_axis(vals, order, axis=1).astype(jnp.float32),
+            jnp.take_along_axis(idx, order, axis=1).astype(jnp.int32))

@@ -62,6 +62,12 @@ class SolveConfig:
     stop: StopRule = "fixed"
     patience: int = 5
 
+    # dense_topk: neighbors kept per row (excluding the self/preference
+    # slot). None -> min(64, N-1); values >= N-1 mean full coverage, where
+    # the sparse sweep reproduces dense_parallel exactly. Memory is
+    # O(L*N*k) against the dense O(L*N^2).
+    k: Optional[int] = None
+
     # distributed backends (mr1d_*, mr2d)
     mesh: Optional[Any] = None          # jax Mesh; auto-built when None
     pad_to: Optional[int] = None        # force-pad N to a multiple (tests)

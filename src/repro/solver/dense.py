@@ -80,39 +80,26 @@ def _assignments(state: hap.HAPState) -> jnp.ndarray:
     return jnp.argmax(state.a + state.r, axis=2).astype(jnp.int32)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("order", "max_iterations", "damping", "kappa",
-                     "s_mode", "stop", "patience", "block"))
-def run_dense(
-    s3: jnp.ndarray,
-    *,
-    order: str,
-    max_iterations: int,
-    damping: float = 0.5,
-    kappa: float = 0.0,
-    s_mode: str = "off",
-    stop: str = "fixed",
-    patience: int = 5,
-    block: int = 256,
-):
-    """Run a dense backend on an (L, N, N) stack.
+def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
+                 max_iterations: int, stop: str, patience: int):
+    """The one stopping-rule loop every single-device backend shares.
 
-    Returns ``(state, exemplars, n_sweeps, converged, trace)`` where
-    ``trace`` has length ``max_iterations``; entries past ``n_sweeps``
-    are -1 (the while_loop never wrote them).
+    ``sweep(state, it) -> state`` and ``assign(state) -> (L, N) int32``
+    are backend-specific (dense tensors or the compressed top-k layout);
+    the fixed-budget scan, the convergence-driven ``lax.while_loop`` with
+    its patience counter, and the per-sweep assignment-change trace are
+    identical across layouts and live here. Returns
+    ``(state, exemplars, n_sweeps, converged, trace)``; ``trace`` has
+    length ``max_iterations`` with -1 past ``n_sweeps`` (the while_loop
+    never wrote them).
     """
-    s3 = s3.astype(jnp.float32)
-    levels, n, _ = s3.shape
-    init = hap.hap_init(s3)
-    sweep = _make_sweep(order, damping, kappa, s_mode, block)
     e0 = jnp.full((levels, n), -1, jnp.int32)
 
     if stop == "fixed":
         def step(carry, it):
             state, e_prev = carry
             state = sweep(state, it)
-            e = _assignments(state)
+            e = assign(state)
             changed = jnp.sum((e != e_prev).astype(jnp.int32))
             return (state, e), changed
 
@@ -131,7 +118,7 @@ def run_dense(
     def body(carry):
         state, e_prev, stable, it, trace = carry
         state = sweep(state, it)
-        e = _assignments(state)
+        e = assign(state)
         changed = jnp.sum((e != e_prev).astype(jnp.int32))
         stable = jnp.where(changed == 0, stable + 1, jnp.int32(0))
         trace = trace.at[it].set(changed)
@@ -140,3 +127,33 @@ def run_dense(
     carry = (init, e0, jnp.int32(0), jnp.int32(0), trace0)
     state, e, stable, it, trace = jax.lax.while_loop(cond, body, carry)
     return state, e, it, stable >= patience, trace
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("order", "max_iterations", "damping", "kappa",
+                     "s_mode", "stop", "patience", "block"))
+def run_dense(
+    s3: jnp.ndarray,
+    *,
+    order: str,
+    max_iterations: int,
+    damping: float = 0.5,
+    kappa: float = 0.0,
+    s_mode: str = "off",
+    stop: str = "fixed",
+    patience: int = 5,
+    block: int = 256,
+):
+    """Run a dense backend on an (L, N, N) stack.
+
+    Returns ``(state, exemplars, n_sweeps, converged, trace)`` — see
+    ``drive_sweeps`` for the trace convention.
+    """
+    s3 = s3.astype(jnp.float32)
+    levels, n, _ = s3.shape
+    init = hap.hap_init(s3)
+    sweep = _make_sweep(order, damping, kappa, s_mode, block)
+    return drive_sweeps(init, sweep, _assignments, levels, n,
+                        max_iterations=max_iterations, stop=stop,
+                        patience=patience)

@@ -151,6 +151,11 @@ def solve(data, config: Optional[SolveConfig] = None,
 
     if spec.needs_points:
         raw = spec.run(x, cfg)
+    elif spec.accepts_points and x is not None and s3 is None:
+        # points-capable backend (dense_topk): hand it the raw points so
+        # its own (compressed) similarity build runs and the dense N x N
+        # matrix is never materialized here
+        raw = spec.run(x, cfg)
     else:
         if s3 is None:
             s3 = _build_similarity(x, cfg, backend)

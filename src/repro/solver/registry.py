@@ -28,6 +28,11 @@ class BackendSpec:
     mesh_kind: Optional[str] = None
     #: backend consumes raw points, not a similarity tensor
     needs_points: bool = False
+    #: backend can consume raw points directly (building its own —
+    #: possibly compressed — similarity representation) but also accepts
+    #: a similarity stack; the engine hands it points when it has them so
+    #: the dense (N, N) matrix is never materialized on its account
+    accepts_points: bool = False
     #: backend honors cfg.stop == "converged" (lax.while_loop early exit)
     supports_early_stop: bool = False
     #: one-line description for docs/CLI listings
@@ -64,23 +69,25 @@ def auto_select(n: int, levels: int, *, n_devices: int, has_points: bool,
     """Pick a backend from problem size and hardware (the local-vs-global
     regime split of Xia et al.):
 
-    1. N past the quadratic-state budget and raw points available ->
-       ``sharded_streaming`` (O((N/S)^2) peak state);
+    1. N past the quadratic-state budget and raw points available:
+       ``sharded_streaming`` when a single output level satisfies the
+       request (it collapses the hierarchy), else ``dense_topk`` — the
+       O(L*N*k)-state sparse backend keeps the full hierarchy *and* the
+       convergence stopping rule at any N;
     2. multiple devices and N big enough to shard -> ``mr1d_stats`` (the
        O(L*N) communication mode);
     3. single device: ``dense_fused`` on TPU (Pallas hot path), else
        ``dense_parallel`` (XLA-fused Jacobi sweeps).
 
-    ``stop="converged"`` restricts the choice to the dense family — the
-    streaming and distributed backends run fixed schedules and would
-    reject it. ``sharded_streaming`` is only auto-picked for single-level
-    requests (it collapses the hierarchy to one output level); a
-    multi-level request at huge N keeps the requested semantics and the
-    caller opts into streaming explicitly if one level is acceptable.
+    ``stop="converged"`` restricts the choice to the dense family
+    (including ``dense_topk``) — the streaming and distributed backends
+    run fixed schedules and would reject it.
     """
     early = cfg.stop == "converged"
-    if has_points and n >= STREAMING_THRESHOLD and levels == 1 and not early:
-        return "sharded_streaming"
+    if has_points and n >= STREAMING_THRESHOLD:
+        if levels == 1 and not early:
+            return "sharded_streaming"
+        return "dense_topk"
     if (n_devices > 1 and n >= DISTRIBUTED_THRESHOLD and not early):
         return "mr1d_stats"
     if platform == "tpu":
