@@ -11,18 +11,40 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
 import time
+
+
+def _git_sha() -> str:
+    """Commit the record was produced from: CI env first (no subprocess
+    on runners), then git; "unknown" when neither is available."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def emit(name: str, rows: list, meta: dict | None = None,
          out_dir: str = ".") -> str:
-    """Write BENCH_<name>.json: {"bench", "rows", "meta"}; returns path."""
+    """Write BENCH_<name>.json: {"bench", "rows", "meta"}; returns path.
+
+    Every record is stamped with the git SHA and jax version so the
+    nightly bench trajectory is attributable to a commit + toolchain.
+    """
     try:
         import jax
         backend = jax.default_backend()
         n_devices = len(jax.devices())
+        jax_version = jax.__version__
     except Exception:  # bench records must never die on metadata
-        backend, n_devices = "unknown", 0
+        backend, n_devices, jax_version = "unknown", 0, "unknown"
     rec = {
         "bench": name,
         "rows": rows,
@@ -30,6 +52,8 @@ def emit(name: str, rows: list, meta: dict | None = None,
             "unix_time": int(time.time()),
             "platform": platform.platform(),
             "python": platform.python_version(),
+            "git_sha": _git_sha(),
+            "jax_version": jax_version,
             "jax_backend": backend,
             "n_devices": n_devices,
             **(meta or {}),

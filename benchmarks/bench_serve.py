@@ -1,0 +1,89 @@
+"""Clustering-service load bench: offered-load sweep -> latency/throughput.
+
+For each offered load (requests/second, Poisson arrivals) push a mixed
+shape population through a warmed ``ClusterService`` and record p50/p99
+end-to-end latency, achieved throughput, and the incremental fast-path
+share. The knee where p99 departs from p50 is the service's capacity at
+the configured bucket/batch settings.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--json P]
+
+Emits ``BENCH_serve.json`` (the nightly workflow uploads it; rows are
+named ``serve_load_<rps>`` plus a ``serve_warmup`` compile row).
+"""
+from __future__ import annotations
+
+import argparse
+
+try:
+    from benchmarks._emit import emit
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from _emit import emit
+
+from repro.serve.cluster import ClusterService
+from repro.serve.cluster.loadgen import run_load, synthetic_requests
+from repro.solver.config import SolveConfig
+
+FULL = {"buckets": [(128, 2), (256, 2), (512, 2)], "batch": 8,
+        "loads": [5.0, 20.0, 50.0, 100.0], "requests": 120,
+        "max_iterations": 100}
+SMOKE = {"buckets": [(64, 2), (128, 2)], "batch": 4,
+         "loads": [5.0, 15.0], "requests": 30, "max_iterations": 60}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes/loads for CI")
+    ap.add_argument("--stream-frac", type=float, default=0.5,
+                    help="fraction of requests riding one stream's "
+                         "incremental fast path")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="override output path")
+    args = ap.parse_args(argv)
+    tier = SMOKE if args.smoke else FULL
+
+    cfg = SolveConfig(stop="converged",
+                      max_iterations=tier["max_iterations"],
+                      damping=0.6, levels=2, preference="median",
+                      seed=args.seed)
+    svc = ClusterService(
+        config=cfg,
+        buckets=[(n, d, tier["batch"]) for n, d in tier["buckets"]])
+    delta = svc.warmup()
+    print(f"[serve] warmup: {delta['misses']} compiles "
+          f"{delta['compile_seconds']:.2f}s "
+          f"({len(svc.router.buckets)} buckets x batch {tier['batch']})")
+    rows = [{"name": "serve_warmup", "compiles": delta["misses"],
+             "compile_seconds": delta["compile_seconds"]}]
+
+    print(f"{'rps_offered':>12} {'rps_achieved':>13} {'p50_ms':>8} "
+          f"{'p99_ms':>8} {'fast%':>6} {'err':>4}")
+    for load in tier["loads"]:
+        reqs = synthetic_requests(tier["requests"], tier["buckets"],
+                                  seed=args.seed + int(load))
+        res = run_load(svc, reqs, rps=load, stream="bench",
+                       stream_frac=args.stream_frac, seed=args.seed)
+        print(f"{res.offered_rps:>12.1f} {res.achieved_rps:>13.1f} "
+              f"{res.p50_ms:>8.2f} {res.p99_ms:>8.2f} "
+              f"{100 * res.fast_frac:>5.1f}% {res.n_errors:>4}")
+        rows.append(res.row(f"serve_load_{load:g}"))
+
+    snap = svc.snapshot()
+    post_warm = snap["cache"]["misses"] - delta["misses"]
+    print(f"[serve] cache hits={snap['cache']['hits']} "
+          f"misses={snap['cache']['misses']} "
+          f"(request-path compiles: {post_warm})")
+    emit("serve", rows,
+         meta={"smoke": args.smoke, "stream_frac": args.stream_frac,
+               "request_path_compiles": post_warm, **snap["cache"]},
+         out_dir=".")
+    if args.json:
+        import shutil
+        shutil.move("BENCH_serve.json", args.json)
+        print(f"[serve] moved record to {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,9 +31,15 @@ def dense_labels(e: np.ndarray) -> tuple[np.ndarray, int]:
 
 
 def canonicalize_levels(e: np.ndarray) -> np.ndarray:
-    """Per-level canonicalize of an (L, N) exemplar array (host-side)."""
-    return np.stack([np.asarray(canonicalize(jnp.asarray(e[l])))
-                     for l in range(e.shape[0])])
+    """Per-level canonicalize of an (L, N) exemplar array (host-side).
+
+    Pure numpy on purpose: this runs on the serving hot path once per
+    request, where a jnp gather would cost one XLA compilation per
+    distinct N — a hidden request-path compile the serve test's
+    zero-recompile assertion would catch.
+    """
+    e = np.asarray(e)
+    return np.stack([e[l][e[l]] for l in range(e.shape[0])])
 
 
 def link_hierarchy(exemplars: jnp.ndarray) -> Hierarchy:

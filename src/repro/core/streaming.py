@@ -46,6 +46,34 @@ class StreamingResult(NamedTuple):
     exemplar_of: np.ndarray     # (N,) point index of each point's exemplar
 
 
+def assign_nearest_exemplar(
+    x: np.ndarray, exemplar_points: np.ndarray, *, chunk: int = 4096,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Second-pass assignment: each point to its nearest exemplar.
+
+    The matmul identity ``||c - e||^2 = ||c||^2 + ||e||^2 - 2 c.e`` keeps
+    peak state at O(chunk * K) — no (N, K, d) broadcast. Returns
+    ``(labels, best_sim)``: ``labels[i]`` indexes ``exemplar_points`` and
+    ``best_sim[i] = -min_e ||x_i - e||^2`` is the winning (negative
+    squared Euclidean) similarity, the quantity drift detection compares
+    against the preference. Shared by ``streaming_hap``'s global
+    reassignment pass and the serve-path incremental assignment
+    (``repro.serve.cluster.incremental``).
+    """
+    x = np.asarray(x, np.float32)
+    ex_pts = np.asarray(exemplar_points, np.float32)
+    n = len(x)
+    ex_sq = (ex_pts ** 2).sum(1)[None, :]
+    labels = np.empty(n, np.int32)
+    best = np.empty(n, np.float32)
+    for lo in range(0, n, chunk):
+        blk = x[lo:lo + chunk]
+        d2 = ((blk ** 2).sum(1)[:, None] + ex_sq - 2.0 * blk @ ex_pts.T)
+        labels[lo:lo + chunk] = np.argmin(d2, axis=1)
+        best[lo:lo + chunk] = -np.maximum(d2.min(axis=1), 0.0)
+    return labels, best
+
+
 def _ap_labels(x: np.ndarray, iterations: int, damping: float,
                pref_scale: float = 1.0) -> np.ndarray:
     s = pairwise_similarity(jnp.asarray(x))
@@ -93,15 +121,7 @@ def streaming_hap(
     # are hostage to the shard draw; this one cheap O(N * K) pass closes
     # most of that purity gap. Each exemplar is at distance 0 from
     # itself, so the exemplar set (and n_clusters) is unchanged.
-    ex_pts = x[uniq]                                       # (K, d)
-    ex_sq = (ex_pts ** 2).sum(1)[None, :]
-    labels = np.empty(n, np.int32)
-    for lo in range(0, n, 4096):                           # O(chunk * K) peak
-        chunk = x[lo:lo + 4096]
-        # ||c - e||^2 via the matmul identity: no (chunk, K, d) broadcast
-        d2 = ((chunk ** 2).sum(1)[:, None] + ex_sq
-              - 2.0 * chunk @ ex_pts.T)
-        labels[lo:lo + 4096] = np.argmin(d2, axis=1)
+    labels, _ = assign_nearest_exemplar(x, x[uniq])
     final_exemplar = uniq[labels]
     return StreamingResult(labels, x[uniq],
                            shard_exemplar_of, len(uniq),

@@ -1,0 +1,99 @@
+"""Clustering-service driver — stand up a warmed ``ClusterService`` and
+push a synthetic request load through it:
+
+    PYTHONPATH=src python -m repro.launch.cluster_serve \
+        --buckets 128x2,512x2 --requests 200 --rps 20
+
+    PYTHONPATH=src python -m repro.launch.cluster_serve --smoke
+
+Reports compile-cache behaviour (all compiles in warmup, zero on the
+request path), end-to-end latency percentiles, throughput, and — with
+``--stream-frac`` — the incremental fast-path share. ``--json`` writes
+the same record ``benchmarks/bench_serve.py`` emits.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.serve.cluster import ClusterService
+from repro.serve.cluster.loadgen import run_load, synthetic_requests
+from repro.solver.config import SolveConfig
+
+
+def parse_buckets(spec: str) -> list[tuple[int, int]]:
+    """"128x2,512x2" -> [(128, 2), (512, 2)]."""
+    out = []
+    for part in spec.split(","):
+        n, d = part.lower().split("x")
+        out.append((int(n), int(d)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--buckets", default="128x2,512x2",
+                    help="comma list of NxD shape buckets")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="micro-batch capacity per bucket")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--rps", type=float, default=20.0,
+                    help="offered load, requests/second (Poisson)")
+    ap.add_argument("--stream-frac", type=float, default=0.0,
+                    help="fraction of requests riding the incremental "
+                         "fast path of one logical stream")
+    ap.add_argument("--max-iterations", type=int, default=100)
+    ap.add_argument("--damping", type=float, default=0.6)
+    ap.add_argument("--levels", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: CI-speed end-to-end check")
+    ap.add_argument("--json", default=None,
+                    help="also write a BENCH_serve-style json here")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.buckets, args.batch = "64x2,128x2", 4
+        args.requests, args.rps = 24, 10.0
+        args.max_iterations = 60
+
+    shapes = parse_buckets(args.buckets)
+    cfg = SolveConfig(stop="converged", max_iterations=args.max_iterations,
+                      damping=args.damping, levels=args.levels,
+                      preference="median", seed=args.seed)
+    svc = ClusterService(
+        config=cfg, buckets=[(n, d, args.batch) for n, d in shapes])
+    delta = svc.warmup()
+    print(f"[cluster_serve] warmup: {len(svc.router.buckets)} buckets, "
+          f"{delta['misses']} compiles in {delta['compile_seconds']:.2f}s")
+
+    reqs = synthetic_requests(args.requests, shapes, seed=args.seed)
+    res = run_load(svc, reqs, rps=args.rps,
+                   stream="cli" if args.stream_frac > 0 else None,
+                   stream_frac=args.stream_frac, seed=args.seed)
+    snap = svc.snapshot()
+    print(f"[cluster_serve] {res.n_requests} requests @ "
+          f"{res.offered_rps:.1f} rps offered -> "
+          f"{res.achieved_rps:.1f} rps achieved | "
+          f"p50 {res.p50_ms:.1f} ms  p99 {res.p99_ms:.1f} ms | "
+          f"{res.n_errors} errors")
+    print(f"[cluster_serve] micro-batches={snap['micro_batches']} "
+          f"fast-path={snap['fast_assigns']} "
+          f"cache hits/misses={snap['cache']['hits']}/"
+          f"{snap['cache']['misses']}")
+    post_warm = snap["cache"]["misses"] - delta["misses"]
+    if post_warm:
+        print(f"[cluster_serve] WARNING: {post_warm} request-path "
+              "compiles (bucket table did not cover the load)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "serve",
+                       "rows": [res.row(f"serve_load_{args.rps:g}")],
+                       "meta": {"smoke": args.smoke, **snap["cache"]}},
+                      f, indent=1, default=float)
+        print(f"[cluster_serve] wrote {args.json}")
+    return 1 if (res.n_errors or post_warm) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,3 +5,7 @@ from repro.serve.kvcache import exemplar_compress_cache
 __all__ = ["ContinuousBatchingEngine", "insert_sequence", "ServeEngine",
            "make_prefill_step", "make_decode_step",
            "exemplar_compress_cache"]
+
+# the clustering request engine lives in repro.serve.cluster — imported
+# lazily by callers (it pulls in the whole solver stack)
+

@@ -1,0 +1,24 @@
+"""Clustering-as-a-service over the unified HAP solver engine.
+
+    from repro.serve.cluster import ClusterService
+
+    svc = ClusterService(buckets=[(128, 2), (512, 2)])
+    svc.warmup()                                   # all compiles happen here
+    fut = svc.submit(points, stream="sensors")     # Future[ClusterResponse]
+    svc.drain()                                    # or svc.start() a thread
+    fut.result().labels
+
+See docs/serving.md for architecture, bucket tuning, and drift control.
+"""
+from repro.serve.cluster.buckets import Bucket, BucketRouter
+from repro.serve.cluster.compile_cache import CacheStats, CompileCache
+from repro.serve.cluster.incremental import AssignResult, StreamState
+from repro.serve.cluster.service import (
+    ClusterResponse, ClusterService, ServiceStats,
+)
+
+__all__ = [
+    "Bucket", "BucketRouter", "CacheStats", "CompileCache",
+    "AssignResult", "StreamState", "ClusterResponse", "ClusterService",
+    "ServiceStats",
+]

@@ -1,0 +1,71 @@
+"""Explicit compile cache over the solver's batched AOT handles.
+
+jax's own jit cache would deduplicate compilations too — but invisibly,
+which is useless for operating a service: you cannot alert on "the
+request path compiled" if you cannot see it happen. This cache makes
+compilation a *counted, warmup-time event*: every miss builds and
+``compile()``s a ``BatchedDenseSolver`` (one real XLA compilation), every
+hit returns the live executable, and the hit/miss/compile-seconds
+counters are the observability surface the end-to-end serve test asserts
+"zero recompiles after warmup" against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+from repro.serve.cluster.buckets import Bucket
+from repro.solver.compiled import BatchedDenseSolver, config_static_key
+from repro.solver.config import SolveConfig
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compile_seconds: float = 0.0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class CompileCache:
+    """(bucket, config) -> compiled BatchedDenseSolver, with counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: dict[tuple, BatchedDenseSolver] = {}
+        self.stats = CacheStats()
+
+    def key(self, bucket: Bucket, cfg: SolveConfig) -> tuple:
+        return (bucket.key, config_static_key(cfg))
+
+    def get(self, bucket: Bucket, cfg: SolveConfig) -> BatchedDenseSolver:
+        """The only compilation point in the serving stack."""
+        key = self.key(bucket, cfg)
+        with self._lock:
+            solver = self._cache.get(key)
+            if solver is not None:
+                self.stats.hits += 1
+                return solver
+            # compile inside the lock: concurrent first requests for one
+            # bucket must not both pay (and double-count) the compile
+            self.stats.misses += 1
+            t0 = time.perf_counter()
+            solver = BatchedDenseSolver(
+                bucket.batch, bucket.n, bucket.d, cfg).compile()
+            self.stats.compile_seconds += time.perf_counter() - t0
+            self._cache[key] = solver
+            return solver
+
+    def warm(self, buckets, cfg: SolveConfig) -> dict:
+        """Precompile every (bucket, cfg) pair; returns the stats delta."""
+        before = self.stats.snapshot()
+        for b in buckets:
+            self.get(b, cfg)
+        after = self.stats.snapshot()
+        return {k: after[k] - before[k] for k in before}
+
+    def __len__(self) -> int:
+        return len(self._cache)

@@ -1,0 +1,99 @@
+"""Incremental exemplar assignment: the between-solves fast path.
+
+Xia et al.'s two-stage local/global AP (PAPERS.md) absorbs new data by
+assigning it against an existing global exemplar set instead of
+re-clustering. Per logical *stream*, the service keeps the last full
+solve's exemplar set; incoming points are assigned to their nearest
+exemplar with ``repro.core.streaming.assign_nearest_exemplar`` (the same
+matmul-identity second pass ``sharded_streaming`` runs) — an O(n_new * K)
+matmul against a full solve's O(N^2 * sweeps).
+
+Drift is the fraction of points *closer to no exemplar than the
+preference*: under the negative-squared-Euclidean convention a point with
+``max_e s(x, e) < preference`` would rather self-exemplate than join any
+existing cluster, i.e. the exemplar set no longer explains it. When the
+exponentially-weighted drift fraction crosses the threshold the stream is
+stale and the service schedules a background full re-solve over the
+stream's accumulated points.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.core.streaming import assign_nearest_exemplar
+
+
+@dataclasses.dataclass
+class AssignResult:
+    """Fast-path output: cluster ids against the stream's exemplar set."""
+    labels: np.ndarray           # (n,) index into exemplar_points
+    exemplar_points: np.ndarray  # (K, d) the stream's current exemplars
+    best_sim: np.ndarray         # (n,) similarity to the chosen exemplar
+    drift: float                 # this batch's stale fraction
+    stream_drift: float          # stream EWMA after this batch
+    resolve_triggered: bool
+
+
+class StreamState:
+    """Everything the service remembers about one logical stream."""
+
+    def __init__(self, stream_id: str, *, drift_threshold: float = 0.25,
+                 drift_halflife: int = 256, max_points: int = 100_000):
+        self.stream_id = stream_id
+        self.drift_threshold = float(drift_threshold)
+        # per-point EWMA decay derived from a point-count halflife, so the
+        # drift estimate has the same memory whatever the batch sizes
+        self.decay = 0.5 ** (1.0 / max(int(drift_halflife), 1))
+        self.max_points = int(max_points)
+        self.lock = threading.Lock()
+        self.exemplar_points: Optional[np.ndarray] = None   # (K, d)
+        self.preference: float = 0.0
+        self.drift_ewma: float = 0.0
+        self.points: Optional[np.ndarray] = None            # accumulated
+        self.generation = 0          # bumps on every completed full solve
+        self.resolve_pending = False
+
+    # ----------------------------------------------------------- updates
+    def absorb(self, points: np.ndarray) -> None:
+        """Append points to the stream buffer (the re-solve working set),
+        bounded by ``max_points`` (oldest dropped first)."""
+        points = np.asarray(points, np.float32)
+        buf = (points if self.points is None
+               else np.concatenate([self.points, points]))
+        self.points = buf[-self.max_points:]
+
+    def install(self, exemplar_points: np.ndarray, preference: float
+                ) -> None:
+        """Adopt a completed full solve's exemplar set; drift resets —
+        the new exemplars explain the buffer by construction."""
+        self.exemplar_points = np.asarray(exemplar_points, np.float32)
+        self.preference = float(preference)
+        self.drift_ewma = 0.0
+        self.generation += 1
+        self.resolve_pending = False
+
+    @property
+    def ready(self) -> bool:
+        return self.exemplar_points is not None
+
+    def assign(self, points: np.ndarray) -> AssignResult:
+        """Nearest-exemplar assignment + drift accounting. Caller holds
+        ``self.lock``."""
+        labels, best = assign_nearest_exemplar(points, self.exemplar_points)
+        stale = best < self.preference
+        drift = float(stale.mean()) if len(stale) else 0.0
+        # fold the batch in point-by-point-equivalent EWMA form
+        w = self.decay ** len(points)
+        self.drift_ewma = w * self.drift_ewma + (1.0 - w) * drift
+        trigger = (self.drift_ewma > self.drift_threshold
+                   and not self.resolve_pending)
+        if trigger:
+            self.resolve_pending = True
+        return AssignResult(
+            labels=labels, exemplar_points=self.exemplar_points,
+            best_sim=best, drift=drift, stream_drift=self.drift_ewma,
+            resolve_triggered=trigger)

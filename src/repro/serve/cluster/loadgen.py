@@ -1,0 +1,114 @@
+"""Synthetic load generation against a ``ClusterService``.
+
+Shared by the ``repro.launch.cluster_serve`` driver and
+``benchmarks/bench_serve.py``: build a mixed request population over the
+service's shape buckets, offer it at a Poisson arrival rate through the
+background scheduler, and report end-to-end latency percentiles +
+achieved throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.data.synth import gaussian_blobs
+from repro.serve.cluster.service import ClusterService
+
+
+@dataclasses.dataclass
+class LoadResult:
+    offered_rps: float
+    achieved_rps: float
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    n_requests: int
+    n_errors: int
+    fast_frac: float           # fraction served by incremental assignment
+    duration_s: float
+
+    def row(self, name: str) -> dict:
+        return {"name": name, **dataclasses.asdict(self)}
+
+
+def synthetic_requests(n_requests: int, shapes: Sequence[tuple], *,
+                       seed: int = 0, clusters: int = 4) -> list:
+    """A deterministic mixed-shape request population: blobs data at each
+    (n, d) shape, round-robin so every bucket sees steady traffic."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        n, d = shapes[i % len(shapes)]
+        # jitter n below the bucket edge: real traffic is never bucket-sized
+        n_eff = int(max(clusters * 2, n - rng.integers(0, max(n // 4, 1))))
+        x, _ = gaussian_blobs(n=n_eff, k=clusters, dim=d,
+                              seed=int(rng.integers(1 << 31)), spread=0.4)
+        out.append(np.asarray(x, np.float32))
+    return out
+
+
+def run_load(svc: ClusterService, requests: list, *, rps: float,
+             stream: Optional[str] = None, stream_frac: float = 0.0,
+             seed: int = 0, timeout: float = 300.0) -> LoadResult:
+    """Offer ``requests`` at Poisson rate ``rps`` req/s; measure
+    arrival-to-completion latency per request.
+
+    ``stream_frac`` of requests (after the first, which seeds the
+    stream's exemplar set) ride the incremental fast path when ``stream``
+    is set. Latency includes queueing + padding + micro-batch solve.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rps, 1e-9), size=len(requests))
+    started = svc._thread is None
+    if started:
+        svc.start()
+    records: list[dict] = []
+    t_begin = time.perf_counter()
+    arrival = t_begin
+    try:
+        for i, pts in enumerate(requests):
+            arrival += gaps[i]
+            now = time.perf_counter()
+            if arrival > now:
+                time.sleep(arrival - now)
+            t_sub = time.perf_counter()
+            use_stream = (stream is not None
+                          and (i == 0 or rng.random() < stream_frac))
+            fut = svc.submit(pts, stream=stream if use_stream else None,
+                             mode="auto")
+            rec = {"arrival": t_sub}
+            records.append(rec)
+            fut.add_done_callback(
+                lambda f, r=rec: r.update(
+                    done=time.perf_counter(),
+                    path=(f.result().path if f.exception() is None
+                          else "error")))
+            rec["future"] = fut
+        for rec in records:
+            rec["future"].exception(timeout=timeout)
+        # Future.set_result wakes waiters BEFORE running done-callbacks,
+        # so the stamps may lag .exception() by a beat — join on them
+        deadline = time.perf_counter() + 5.0
+        for rec in records:
+            while "done" not in rec and time.perf_counter() < deadline:
+                time.sleep(1e-3)
+    finally:
+        if started:
+            svc.stop()
+    t_end = time.perf_counter()
+    lat = np.array([(r["done"] - r["arrival"]) * 1e3 for r in records
+                    if "done" in r and r["path"] != "error"])
+    n_err = sum(1 for r in records if r.get("path") == "error")
+    fast = sum(1 for r in records if r.get("path") == "assign")
+    dur = t_end - t_begin
+    return LoadResult(
+        offered_rps=float(rps),
+        achieved_rps=len(lat) / dur if dur > 0 else 0.0,
+        p50_ms=float(np.percentile(lat, 50)) if len(lat) else float("nan"),
+        p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
+        mean_ms=float(lat.mean()) if len(lat) else float("nan"),
+        n_requests=len(records), n_errors=n_err,
+        fast_frac=fast / max(len(records), 1), duration_s=dur)

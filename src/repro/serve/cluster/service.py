@@ -1,0 +1,403 @@
+"""``ClusterService`` — clustering as a long-lived request engine.
+
+The solver engine (`repro.solver.solve`) is script-shaped: every caller
+pays cold compilation and runs alone. This front door turns it into a
+service:
+
+* ``submit(points, ...) -> Future`` — requests enter a queue and resolve
+  to a ``ClusterResponse``;
+* a shape-bucket micro-batcher: requests padded to a small set of (n, d)
+  buckets, compatible requests batched ``bucket.batch`` at a time through
+  one vmap-ed, AOT-compiled dense solve (``repro.solver.compiled``);
+* an explicit compile cache keyed on (bucket, config) with hit/miss
+  counters and a ``warmup()`` API, so the steady state is compile-free
+  and *provably* so;
+* an incremental fast path per logical stream: once a stream has a full
+  solve, new points are assigned to its exemplar set in O(n * K)
+  (``incremental.py``), and a drift threshold triggers a background full
+  re-solve.
+
+Pumping is explicit or threaded: call ``drain()`` to process the queue on
+the caller's thread (deterministic — what the tests and benchmarks use),
+or ``start()`` a scheduler thread that batches with a small gather window
+(``max_wait_ms``) the way a live deployment would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.serve.cluster.buckets import Bucket, BucketRouter
+from repro.serve.cluster.compile_cache import CompileCache
+from repro.serve.cluster.incremental import AssignResult, StreamState
+from repro.solver.compiled import slice_request
+from repro.solver.config import SolveConfig
+from repro.solver.engine import finalize_raw, validate_config
+from repro.solver.result import SolveResult
+
+
+@dataclasses.dataclass
+class ClusterResponse:
+    """What a request's future resolves to.
+
+    ``path`` is "full" (micro-batched solve; ``solve`` holds the engine's
+    uniform SolveResult) or "assign" (incremental fast path; ``assign``
+    holds labels against the stream's exemplar set). ``labels`` is the
+    finest-level cluster id per point on either path.
+    """
+    path: str                          # "full" | "assign"
+    labels: np.ndarray                 # (n,) int32
+    solve: Optional[SolveResult] = None
+    assign: Optional[AssignResult] = None
+    bucket: Optional[tuple] = None     # (n, d, batch) the request rode in
+    stream: Optional[str] = None
+    generation: Optional[int] = None   # stream solve generation consumed
+    queue_ms: float = 0.0
+    solve_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class _Pending:
+    points: np.ndarray
+    n: int
+    future: Future
+    stream: Optional[str]
+    submitted: float
+    internal: bool = False             # drift-triggered re-solve
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    full_solves: int = 0
+    fast_assigns: int = 0
+    micro_batches: int = 0
+    batched_requests: int = 0          # full solves that shared a batch
+    resolves_triggered: int = 0
+    cache: dict = dataclasses.field(default_factory=dict)
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+class ClusterService:
+    """Shape-bucketed, compile-cached clustering request engine."""
+
+    def __init__(self, *, config: Optional[SolveConfig] = None,
+                 buckets=(), auto_bucket: bool = True, max_batch: int = 8,
+                 max_wait_ms: float = 2.0, drift_threshold: float = 0.25,
+                 drift_halflife: int = 256,
+                 stream_max_points: int = 100_000):
+        cfg = config or SolveConfig(stop="converged", max_iterations=100)
+        # fail at construction, not mid-traffic: the batched dense path
+        # ignores sparse-topk k, so a config carrying it is a mistake
+        if cfg.k is not None:
+            raise ValueError(
+                "SolveConfig.k is a dense_topk knob; the service's "
+                "micro-batched path runs dense solves and would silently "
+                "ignore it — leave k=None (route big-N work to solve())")
+        validate_config(cfg, n=2**30)
+        self.config = cfg
+        self.router = BucketRouter(buckets, auto=auto_bucket,
+                                   default_batch=max_batch)
+        self.cache = CompileCache()
+        self.stats = ServiceStats()
+        self.max_wait_ms = float(max_wait_ms)
+        self._drift_threshold = drift_threshold
+        self._drift_halflife = drift_halflife
+        self._stream_max_points = stream_max_points
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._queues: "OrderedDict[tuple, deque[_Pending]]" = OrderedDict()
+        self._streams: dict[str, StreamState] = {}
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+
+    # ------------------------------------------------------------ warmup
+    def warmup(self, shapes=None) -> dict:
+        """Compile every (bucket, service-config) executable up front.
+
+        ``shapes``: extra ``(n, d)`` / ``(n, d, batch)`` specs to register
+        before compiling (the expected traffic envelope). Returns the
+        compile-cache delta — ``misses`` is the number of XLA compilations
+        paid here instead of on the request path. Warmup always uses the
+        service's own config: that is the key every request hits.
+        """
+        for spec in shapes or ():
+            n, d, *rest = spec
+            self.router.add(Bucket(int(n), int(d),
+                                   int(rest[0]) if rest
+                                   else self.router.default_batch))
+        return self.cache.warm(self.router.buckets, self.config)
+
+    # ------------------------------------------------------------ submit
+    def submit(self, points, *, stream: Optional[str] = None,
+               mode: str = "auto") -> Future:
+        """Enqueue a clustering request; returns a Future[ClusterResponse].
+
+        ``mode``: "auto" rides the incremental fast path whenever the
+        stream already has an exemplar set, "full" forces a micro-batched
+        solve, "assign" demands the fast path (errors if the stream has
+        no exemplars yet).
+        """
+        if mode not in ("auto", "full", "assign"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if stream is not None and self.config.metric != "neg_sqeuclidean":
+            # the fast path's nearest-exemplar matmul and its drift test
+            # (best_sim vs preference) are negative-squared-Euclidean
+            # quantities; under another metric they would silently
+            # disagree with the full solves
+            raise ValueError(
+                "streams (incremental assignment) require "
+                f"metric='neg_sqeuclidean'; this service is configured "
+                f"with metric={self.config.metric!r} — submit without "
+                "stream= for plain micro-batched solves")
+        pts = np.asarray(points, np.float32)
+        if pts.ndim != 2:
+            raise ValueError(f"points must be (n, d); got {pts.shape}")
+        fut: Future = Future()
+        now = time.perf_counter()
+        with self._lock:
+            self.stats.requests += 1
+            st = self._stream_state(stream) if stream else None
+
+        if st is not None and mode != "full":
+            with st.lock:
+                if st.ready:
+                    self._fast_assign(st, pts, fut, now)
+                    return fut
+                if mode == "assign":
+                    fut.set_exception(RuntimeError(
+                        f"stream {stream!r} has no exemplar set yet; "
+                        "submit a full solve first"))
+                    return fut
+        elif mode == "assign":
+            fut.set_exception(RuntimeError(
+                "mode='assign' needs a stream with a prior full solve"))
+            return fut
+
+        if pts.shape[0] < 2:
+            # degenerate single-point request: trivially its own exemplar
+            fut.set_result(self._trivial_response(pts, stream))
+            return fut
+        self._enqueue(_Pending(pts, pts.shape[0], fut, stream, now))
+        return fut
+
+    def solve_sync(self, points, **kw) -> ClusterResponse:
+        """submit + drain + result — the one-caller convenience path."""
+        fut = self.submit(points, **kw)
+        if not fut.done():
+            self.drain()
+        return fut.result()
+
+    # ------------------------------------------------------- fast path
+    def _fast_assign(self, st: StreamState, pts, fut: Future,
+                     submitted: float) -> None:
+        """Incremental assignment under the stream lock; sets the future
+        inline (O(n*K) matmul — cheaper than any queue round-trip)."""
+        t0 = time.perf_counter()
+        res = st.assign(pts)
+        st.absorb(pts)
+        gen = st.generation
+        trigger = res.resolve_triggered
+        dt = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self.stats.fast_assigns += 1
+            if trigger:
+                self.stats.resolves_triggered += 1
+        fut.set_result(ClusterResponse(
+            path="assign", labels=res.labels, assign=res,
+            stream=st.stream_id, generation=gen,
+            queue_ms=(t0 - submitted) * 1e3, solve_ms=dt))
+        if trigger:
+            # background full re-solve over the stream's accumulated
+            # buffer; its future is internal (result lands in the
+            # stream). The working set is capped at the largest bucket so
+            # a re-solve can never force a new shape (and a request-path
+            # compile) — the most recent points win.
+            window = max((b.n for b in self.router.buckets),
+                         default=self._stream_max_points)
+            buf = st.points[-window:].copy()
+            self._enqueue(_Pending(buf, len(buf), Future(),
+                                   st.stream_id, time.perf_counter(),
+                                   internal=True))
+
+    def _trivial_response(self, pts, stream) -> ClusterResponse:
+        n = pts.shape[0]
+        labels = np.zeros((n,), np.int32)
+        return ClusterResponse(path="full", labels=labels, stream=stream)
+
+    # ---------------------------------------------------------- queueing
+    def _stream_state(self, stream: str) -> StreamState:
+        st = self._streams.get(stream)
+        if st is None:
+            st = self._streams[stream] = StreamState(
+                stream, drift_threshold=self._drift_threshold,
+                drift_halflife=self._drift_halflife,
+                max_points=self._stream_max_points)
+        return st
+
+    def _enqueue(self, req: _Pending) -> None:
+        bucket = self.router.route(req.n, req.points.shape[1])
+        if bucket is None:
+            req.future.set_exception(ValueError(
+                f"no bucket fits request shape {req.points.shape} and "
+                "auto_bucket is off; add one via warmup(shapes=...)"))
+            return
+        with self._work:
+            self._queues.setdefault(bucket.key, deque()).append(req)
+            self._work.notify()
+
+    # ----------------------------------------------------------- pumping
+    def drain(self) -> int:
+        """Process queued micro-batches on the caller's thread until the
+        queue is empty (drift re-solves enqueued mid-drain included).
+        Returns the number of micro-batches executed."""
+        batches = 0
+        while True:
+            grabbed = self._grab_batch()
+            if grabbed is None:
+                return batches
+            self._run_batch(*grabbed)
+            batches += 1
+
+    def start(self) -> None:
+        """Background scheduler: gathers up to ``bucket.batch`` requests
+        per micro-batch within a ``max_wait_ms`` window."""
+        with self._lock:
+            if self._running:
+                return
+            self._running = True
+        self._thread = threading.Thread(
+            target=self._loop, name="cluster-serve", daemon=True)
+        self._thread.start()
+
+    def stop(self, timeout: float = 10.0) -> None:
+        with self._work:
+            self._running = False
+            self._work.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while self._running and not self._queues:
+                    self._work.wait(0.1)
+                if not self._running and not self._queues:
+                    return
+            # brief gather window so near-simultaneous requests share a
+            # batch instead of each riding alone
+            if self.max_wait_ms > 0:
+                time.sleep(self.max_wait_ms / 1e3)
+            grabbed = self._grab_batch()
+            if grabbed is not None:
+                self._run_batch(*grabbed)
+
+    def _grab_batch(self):
+        """Pop up to ``batch`` requests from the oldest non-empty bucket
+        queue. FIFO across buckets keeps tail latency bounded under a
+        skewed mix."""
+        with self._work:
+            for key in list(self._queues):
+                q = self._queues[key]
+                if not q:
+                    del self._queues[key]
+                    continue
+                bucket = Bucket(*key)
+                reqs = [q.popleft() for _ in range(min(len(q),
+                                                       bucket.batch))]
+                if not q:
+                    del self._queues[key]
+                return bucket, reqs
+            return None
+
+    # ------------------------------------------------------ micro-batch
+    def _run_batch(self, bucket: Bucket, reqs) -> None:
+        """Pad, run the bucket's compiled solve once, finish each rider."""
+        t0 = time.perf_counter()
+        try:
+            solver = self.cache.get(bucket, self.config)
+            pts = np.zeros((bucket.batch, bucket.n, bucket.d), np.float32)
+            n_real = np.full((bucket.batch,), 2, np.int32)  # inert filler
+            for i, r in enumerate(reqs):
+                pts[i] = self.router.pad_points(r.points, bucket)
+                n_real[i] = r.n
+            raw = solver.run(pts, n_real)
+        except Exception as exc:  # one bad batch must not wedge the queue
+            for r in reqs:
+                if r.internal and r.stream is not None:
+                    # a failed drift re-solve must release the pending
+                    # flag, or the stream can never schedule another one
+                    with self._lock:
+                        st = self._streams.get(r.stream)
+                    if st is not None:
+                        with st.lock:
+                            st.resolve_pending = False
+                if not r.future.done():
+                    r.future.set_exception(exc)
+            return
+        dt = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self.stats.micro_batches += 1
+            self.stats.full_solves += len(reqs)
+            self.stats.batched_requests += max(len(reqs) - 1, 0)
+            self.stats.cache = self.cache.stats.snapshot()
+        for i, r in enumerate(reqs):
+            rbr, pref = slice_request(raw, i, r.n, self.config.stop)
+            result = finalize_raw(rbr, r.n, "serve_batched")
+            gen = None
+            if r.stream is not None:
+                gen = self._install_stream(r, result, pref)
+            if not r.future.done():
+                r.future.set_result(ClusterResponse(
+                    path="full", labels=result.labels[0], solve=result,
+                    bucket=bucket.key, stream=r.stream, generation=gen,
+                    queue_ms=(t0 - r.submitted) * 1e3, solve_ms=dt))
+
+    def _install_stream(self, r: _Pending, result: SolveResult,
+                        pref: float) -> int:
+        """A stream-tagged full solve installs its finest-level exemplar
+        set (coordinates) as the stream's assignment target."""
+        with self._lock:
+            st = self._stream_state(r.stream)
+        with st.lock:
+            ex_idx = np.unique(result.exemplars[0])
+            st.install(r.points[ex_idx], pref)
+            if not r.internal:
+                st.absorb(r.points)
+            return st.generation
+
+    # ------------------------------------------------------------- intro
+    def stream_info(self, stream: str) -> dict:
+        with self._lock:
+            st = self._streams.get(stream)
+        if st is None:
+            return {}
+        with st.lock:
+            return {
+                "ready": st.ready, "generation": st.generation,
+                "n_exemplars": (0 if st.exemplar_points is None
+                                else len(st.exemplar_points)),
+                "drift": st.drift_ewma, "preference": st.preference,
+                "buffered_points": 0 if st.points is None
+                                   else len(st.points),
+                "resolve_pending": st.resolve_pending,
+            }
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            s = self.stats.snapshot()
+            s["cache"] = self.cache.stats.snapshot()
+            s["buckets"] = [b.key for b in self.router.buckets]
+            s["compiled"] = len(self.cache)
+        return s

@@ -10,7 +10,7 @@
 See docs/solver.md for the backend table and selection rules.
 """
 from repro.solver.config import SolveConfig
-from repro.solver.engine import solve
+from repro.solver.engine import finalize_raw, solve, validate_config
 from repro.solver.registry import (
     BackendSpec, auto_select, get_backend, list_backends, register_backend,
 )
@@ -19,5 +19,5 @@ from repro.solver.result import RawBackendResult, SolveResult
 __all__ = [
     "solve", "SolveConfig", "SolveResult", "RawBackendResult",
     "BackendSpec", "register_backend", "get_backend", "list_backends",
-    "auto_select",
+    "auto_select", "finalize_raw", "validate_config",
 ]

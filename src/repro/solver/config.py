@@ -63,8 +63,9 @@ class SolveConfig:
     patience: int = 5
 
     # dense_topk: neighbors kept per row (excluding the self/preference
-    # slot). None -> min(64, N-1); values >= N-1 mean full coverage, where
-    # the sparse sweep reproduces dense_parallel exactly. Memory is
+    # slot). None -> min(64, N-1); k = N-1 is full coverage, where the
+    # sparse sweep reproduces dense_parallel exactly. solve() rejects
+    # k < 1 and k >= N at entry (engine.validate_config). Memory is
     # O(L*N*k) against the dense O(L*N^2).
     k: Optional[int] = None
 

@@ -36,6 +36,28 @@ from repro.solver.registry import auto_select, get_backend
 from repro.solver.result import RawBackendResult, SolveResult
 
 
+# ------------------------------------------------------------- validation
+def validate_config(cfg: SolveConfig, n: int) -> None:
+    """Reject invalid knob combinations at the front door, with the
+    problem size in hand, instead of failing deep inside a backend."""
+    if cfg.k is not None:
+        if cfg.k < 1:
+            raise ValueError(
+                f"SolveConfig.k must be >= 1 (got k={cfg.k})")
+        if cfg.k >= n:
+            raise ValueError(
+                f"SolveConfig.k must be < N (got k={cfg.k}, N={n}); "
+                "k = N - 1 already stores every off-diagonal entry "
+                "(full coverage)")
+    if cfg.patience < 0:
+        raise ValueError(
+            f"SolveConfig.patience must be >= 0 (got {cfg.patience})")
+    if cfg.max_iterations < 1:
+        raise ValueError(
+            "SolveConfig.max_iterations must be >= 1 "
+            f"(got {cfg.max_iterations})")
+
+
 # ------------------------------------------------------------------ input
 def _normalize_input(data, cfg: SolveConfig):
     """-> (points or None, similarity stack or None, original N)."""
@@ -130,6 +152,7 @@ def solve(data, config: Optional[SolveConfig] = None,
         cfg = cfg.replace(**overrides)
 
     x, s3, n = _normalize_input(data, cfg)
+    validate_config(cfg, n)
 
     backend = cfg.backend
     if backend == "auto":
@@ -166,6 +189,15 @@ def solve(data, config: Optional[SolveConfig] = None,
         else:
             raw = spec.run(s3, cfg)
 
+    return _finalize(raw, n, backend)
+
+
+def finalize_raw(raw: RawBackendResult, n: int, backend: str) -> SolveResult:
+    """Public engine hook: turn a backend's raw output into a
+    ``SolveResult`` (strip padding, canonicalize, relabel). The serve-path
+    micro-batcher runs backends through its own compiled handles and
+    finishes each request here, so service results and ``solve()`` results
+    are the same type with the same conventions."""
     return _finalize(raw, n, backend)
 
 

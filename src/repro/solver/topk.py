@@ -50,7 +50,9 @@ class TopKState(NamedTuple):
 
 def resolve_k(k: Optional[int], n: int) -> int:
     """cfg.k -> effective neighbor count: default when None, clamped to
-    the lossless maximum N - 1 (so ``k >= N - 1`` means exact/dense)."""
+    the lossless maximum N - 1. ``solve()`` already rejects k outside
+    [1, N) at entry; the clamp keeps direct callers of this module
+    safe."""
     if k is None:
         return min(DEFAULT_K, n - 1)
     if k < 1:
@@ -75,6 +77,10 @@ def sampled_preferences(x: jnp.ndarray, strategy: str, metric: str,
     over-produces exemplars; a PREF_SAMPLE-point subsample's dense
     similarity matrix (O(PREF_SAMPLE^2), constant in N) recovers the
     Frey & Dueck calibration without materializing N x N.
+
+    Deterministic under ``key``: the subsample is the only random draw,
+    so two runs with the same key (the engine threads
+    ``SolveConfig.seed`` here) produce bit-identical preferences.
     """
     from repro.core.preferences import make_preferences
     from repro.core.similarity import pairwise_similarity
@@ -143,7 +149,11 @@ def build_from_points(x: jnp.ndarray, k: int, levels: int, *,
             and k < n - 1):
         if key is None:
             key = jax.random.PRNGKey(0)
-        pref = sampled_preferences(x, preference, metric, key)
+        # dedicated fold so the subsample draw is decoupled from any other
+        # consumer of the caller's key (e.g. "random" preferences): the
+        # same SolveConfig.seed always selects the same subsample
+        pref = sampled_preferences(x, preference, metric,
+                                   jax.random.fold_in(key, 0x5eed))
     else:
         pref = topk_preferences(vals, preference, key=key)
     s_rows, idx_full = _with_self_slot(vals, idx, pref)

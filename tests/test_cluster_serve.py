@@ -1,0 +1,308 @@
+"""Clustering-as-a-service: buckets, compile cache, micro-batching,
+incremental assignment, and the end-to-end zero-recompile contract.
+
+The expensive fixtures (warmed services) are module-scoped: XLA
+compilation dominates, clustering at these sizes is milliseconds.
+"""
+import numpy as np
+import pytest
+
+from repro.data import gaussian_blobs
+from repro.serve.cluster import Bucket, BucketRouter, ClusterService
+from repro.solver import SolveConfig, solve
+
+CFG = SolveConfig(stop="converged", max_iterations=80, damping=0.6,
+                  levels=2, preference="median")
+
+
+@pytest.fixture(scope="module")
+def service():
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 4), (128, 2, 4)],
+                         auto_bucket=False)
+    svc.warmup()
+    return svc
+
+
+def _blobs(n, seed, spread=0.3):
+    x, y = gaussian_blobs(n=n, k=4, seed=seed, spread=spread, box=14.0)
+    return x, y
+
+
+# ---------------------------------------------------------------- buckets
+def test_router_routes_to_smallest_fit():
+    r = BucketRouter([(64, 2), (128, 2), (128, 4)], auto=False)
+    assert r.route(50, 2) == Bucket(64, 2)
+    assert r.route(64, 2) == Bucket(64, 2)
+    assert r.route(65, 2) == Bucket(128, 2)
+    assert r.route(65, 3) == Bucket(128, 4)   # feature dim pads up too
+    assert r.route(500, 2) is None            # nothing fits, auto off
+
+
+def test_router_auto_grows_power_of_two():
+    r = BucketRouter([(64, 2)], auto=True, default_batch=2)
+    b = r.route(300, 2)
+    assert b == Bucket(512, 2, 2)
+    assert b in r.buckets                      # registered for reuse
+    assert r.route(400, 2) == b
+
+
+def test_pad_points_zero_fills():
+    pts = np.ones((3, 2), np.float32)
+    out = BucketRouter.pad_points(pts, Bucket(8, 4))
+    assert out.shape == (8, 4)
+    assert np.all(out[:3, :2] == 1) and out.sum() == 6
+
+
+def test_feature_dim_padding_preserves_clustering(service):
+    """Zero feature columns leave pairwise distances unchanged, so a
+    (n, 1) request through a (., 2) bucket solves exactly like the
+    unpadded 1-D data."""
+    rng = np.random.default_rng(5)
+    x = np.asarray(np.concatenate([rng.normal(0.0, 0.1, 20),
+                                   rng.normal(9.0, 0.1, 20)]
+                                  ).reshape(-1, 1), np.float32)
+    res = service.solve_sync(x)
+    ref = solve(x, backend="dense_parallel", stop="converged",
+                max_iterations=80, damping=0.6, levels=2,
+                preference="median")
+    assert res.bucket == (64, 2, 4)
+    np.testing.assert_array_equal(res.solve.exemplars, ref.exemplars)
+    np.testing.assert_array_equal(res.solve.n_clusters, ref.n_clusters)
+
+
+# ---------------------------------------------------- compile cache + parity
+def test_warmup_compiles_once_per_bucket():
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 2)],
+                         auto_bucket=False)
+    d1 = svc.warmup()
+    assert d1 == {"hits": 0, "misses": 1,
+                  "compile_seconds": pytest.approx(
+                      d1["compile_seconds"])} and d1["compile_seconds"] > 0
+    d2 = svc.warmup()
+    assert d2["misses"] == 0 and d2["hits"] == 1
+
+
+def test_padded_bucket_solve_bit_matches_engine(service):
+    """A request padded into a bucket (inert dummy rows) must reproduce
+    the unpadded solve() exemplars exactly — same contract as the
+    distributed mesh padding round-trip."""
+    x, _ = _blobs(50, seed=3)
+    res = service.solve_sync(x)
+    ref = solve(x, backend="dense_parallel", stop="converged",
+                max_iterations=80, damping=0.6, levels=2,
+                preference="median")
+    assert res.path == "full" and res.bucket == (64, 2, 4)
+    np.testing.assert_array_equal(res.solve.exemplars, ref.exemplars)
+    np.testing.assert_array_equal(res.solve.labels, ref.labels)
+
+
+def test_micro_batch_riders_match_solo_runs(service):
+    """Requests sharing one vmapped executable get the same answers as
+    requests run alone."""
+    xs = [_blobs(n, seed=s)[0] for n, s in [(40, 1), (55, 2), (64, 3)]]
+    futs = [service.submit(x) for x in xs]
+    before = service.snapshot()["micro_batches"]
+    service.drain()
+    assert service.snapshot()["micro_batches"] == before + 1  # one batch
+    for x, f in zip(xs, futs):
+        ref = solve(x, backend="dense_parallel", stop="converged",
+                    max_iterations=80, damping=0.6, levels=2,
+                    preference="median")
+        np.testing.assert_array_equal(f.result().solve.exemplars,
+                                      ref.exemplars)
+
+
+def test_unroutable_without_auto_bucket_errors(service):
+    fut = service.submit(np.zeros((500, 2), np.float32))
+    with pytest.raises(ValueError, match="no bucket fits"):
+        fut.result(timeout=5)
+
+
+def test_single_point_request_is_trivial(service):
+    res = service.solve_sync(np.zeros((1, 2), np.float32))
+    assert res.labels.tolist() == [0]
+
+
+# ------------------------------------------------------------- incremental
+def test_incremental_matches_fresh_solve_assignment():
+    """Fast-path labels against the stream exemplar set must agree with a
+    fresh solve() on the same points (well-separated data: AP assignment
+    == nearest exemplar)."""
+    svc = ClusterService(config=CFG, buckets=[(128, 2, 2)],
+                         auto_bucket=False)
+    svc.warmup()
+    x, _ = _blobs(120, seed=11, spread=0.25)
+    full = svc.solve_sync(x, stream="st")
+    fast = svc.solve_sync(x, stream="st")          # same points again
+    assert full.path == "full" and fast.path == "assign"
+    fresh = solve(x, backend="dense_parallel", stop="converged",
+                  max_iterations=80, damping=0.6, levels=2,
+                  preference="median")
+    # the exemplar *point coordinates* each point lands on must agree
+    fresh_ex_coords = x[fresh.exemplars[0]]
+    fast_ex_coords = fast.assign.exemplar_points[fast.labels]
+    np.testing.assert_allclose(fast_ex_coords, fresh_ex_coords)
+    assert fast.assign.drift == 0.0                # in-distribution
+
+
+def test_assign_mode_requires_seeded_stream(service):
+    fut = service.submit(np.zeros((8, 2), np.float32), stream="virgin",
+                         mode="assign")
+    with pytest.raises(RuntimeError, match="no exemplar set"):
+        fut.result(timeout=5)
+
+
+def test_drift_triggers_background_resolve():
+    """Points far from every exemplar (best similarity < preference) push
+    the drift EWMA over threshold -> a background full re-solve adopts
+    the new region."""
+    svc = ClusterService(config=CFG, buckets=[(128, 2, 2)],
+                         auto_bucket=False, drift_threshold=0.25,
+                         drift_halflife=16)
+    svc.warmup()
+    rng = np.random.default_rng(0)
+    near = rng.normal(size=(60, 2)).astype(np.float32) * 0.3
+    svc.solve_sync(near, stream="s")
+    gen0 = svc.stream_info("s")["generation"]
+    far = (rng.normal(size=(40, 2)) * 0.3 + 80.0).astype(np.float32)
+    r = svc.solve_sync(far, stream="s")
+    assert r.path == "assign"
+    assert r.assign.drift == 1.0                   # all stale
+    assert r.assign.resolve_triggered
+    svc.drain()                                    # run the re-solve
+    info = svc.stream_info("s")
+    assert info["generation"] == gen0 + 1
+    assert info["drift"] == 0.0                    # reset on install
+    # the refreshed exemplar set now explains the far region
+    r2 = svc.solve_sync(far, stream="s")
+    assert r2.path == "assign" and r2.assign.drift == 0.0
+
+
+def test_resolve_working_set_capped_by_buckets():
+    """A drift re-solve never creates a new bucket shape: the working set
+    is clipped to the largest bucket, so no request-path compile."""
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 2)],
+                         auto_bucket=True, drift_threshold=0.1,
+                         drift_halflife=4)
+    svc.warmup()
+    rng = np.random.default_rng(1)
+    svc.solve_sync(rng.normal(size=(60, 2)).astype(np.float32),
+                   stream="s")
+    misses = svc.snapshot()["cache"]["misses"]
+    for step in range(3):                          # overflow the buffer
+        far = (rng.normal(size=(50, 2)) + 50.0 * (step + 1)).astype(
+            np.float32)
+        svc.submit(far, stream="s").result(timeout=10)
+        svc.drain()
+    assert svc.snapshot()["cache"]["misses"] == misses
+    assert [b.key for b in svc.router.buckets] == [(64, 2, 2)]
+
+
+# ------------------------------------------------------------- end-to-end
+def test_e2e_warm_service_mixed_stream_zero_recompiles():
+    """The acceptance scenario: a warmed service takes a mixed stream of
+    >= 50 requests across >= 2 shape buckets — full solves and
+    incremental assignments interleaved — with ZERO compiles after
+    warmup (compile-cache miss counter flat), and incremental results
+    agreeing with fresh solve() assignments."""
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 4), (128, 2, 4)],
+                         auto_bucket=False)
+    warm = svc.warmup()
+    assert warm["misses"] == 2                     # one per bucket
+    base, _ = _blobs(100, seed=21, spread=0.25)
+    svc.solve_sync(base, stream="e2e")             # seed the stream
+
+    rng = np.random.default_rng(7)
+    futs, checks = [], []
+    for i in range(50):
+        if i % 3 == 0:                             # incremental rider
+            sel = rng.choice(len(base), size=30, replace=False)
+            futs.append(svc.submit(base[sel], stream="e2e"))
+            checks.append(("assign", base[sel]))
+        else:                                      # full solve rider
+            n = int(rng.integers(24, 120))
+            x, _ = _blobs(n, seed=100 + i)
+            futs.append(svc.submit(x))
+            checks.append(("full", x))
+    svc.drain()
+
+    snap = svc.snapshot()
+    assert snap["cache"]["misses"] == 2            # zero recompiles
+    assert snap["cache"]["hits"] >= snap["micro_batches"]
+    assert snap["requests"] >= 51
+    assert snap["fast_assigns"] >= 16
+    assert len(snap["buckets"]) == 2
+
+    fresh = solve(base, backend="dense_parallel", stop="converged",
+                  max_iterations=80, damping=0.6, levels=2,
+                  preference="median")
+    for (kind, pts), fut in zip(checks, futs):
+        res = fut.result(timeout=30)
+        assert res.path == kind
+        assert res.labels.shape == (len(pts),)
+        if kind == "assign":
+            # incremental assignment == fresh solve's exemplar choice
+            idx = [np.flatnonzero((base == p).all(1))[0] for p in pts]
+            want = base[fresh.exemplars[0][idx]]
+            got = res.assign.exemplar_points[res.labels]
+            np.testing.assert_allclose(got, want)
+
+
+def test_service_rejects_topk_k_config():
+    """The batched dense path would silently ignore SolveConfig.k."""
+    with pytest.raises(ValueError, match="dense_topk knob"):
+        ClusterService(config=CFG.replace(k=16))
+
+
+def test_streams_require_sqeuclidean_metric():
+    """Fast-path assignment/drift are -||.||^2 quantities; other metrics
+    must be rejected at submit, not silently mis-assigned."""
+    svc = ClusterService(config=CFG.replace(metric="cosine"),
+                         buckets=[(64, 2, 2)], auto_bucket=False)
+    with pytest.raises(ValueError, match="neg_sqeuclidean"):
+        svc.submit(np.zeros((8, 2), np.float32), stream="s")
+
+
+def test_failed_resolve_releases_pending_flag(monkeypatch):
+    """A drift re-solve that dies must clear resolve_pending so the next
+    drift crossing can schedule a fresh one."""
+    svc = ClusterService(config=CFG, buckets=[(128, 2, 2)],
+                         auto_bucket=False, drift_threshold=0.2,
+                         drift_halflife=8)
+    svc.warmup()
+    rng = np.random.default_rng(2)
+    svc.solve_sync(rng.normal(size=(60, 2)).astype(np.float32),
+                   stream="s")
+    far = (rng.normal(size=(40, 2)) + 70.0).astype(np.float32)
+    r = svc.submit(far, stream="s").result(timeout=10)
+    assert r.assign.resolve_triggered
+    # make the queued internal re-solve fail
+    def boom(bucket, cfg):
+        raise RuntimeError("injected")
+    monkeypatch.setattr(svc.cache, "get", boom)
+    svc.drain()
+    assert svc.stream_info("s")["resolve_pending"] is False
+    monkeypatch.undo()
+    # next drift crossing schedules again and succeeds this time
+    gen0 = svc.stream_info("s")["generation"]
+    svc.submit(far, stream="s").result(timeout=10)
+    svc.drain()
+    assert svc.stream_info("s")["generation"] == gen0 + 1
+
+
+def test_threaded_scheduler_drains_queue():
+    """start()/stop(): the background thread batches and completes
+    everything without explicit drain() calls."""
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 4)],
+                         auto_bucket=False, max_wait_ms=1.0)
+    svc.warmup()
+    svc.start()
+    try:
+        xs = [_blobs(40, seed=s)[0] for s in range(8)]
+        futs = [svc.submit(x) for x in xs]
+        for x, f in zip(xs, futs):
+            res = f.result(timeout=60)
+            assert res.path == "full" and res.labels.shape == (len(x),)
+    finally:
+        svc.stop()
+    assert svc.snapshot()["cache"]["misses"] == 1

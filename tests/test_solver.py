@@ -195,6 +195,30 @@ def test_auto_select_converged_stays_dense():
         assert picked.startswith("dense_")
 
 
+# ------------------------------------------------------------- validation
+def test_rejects_negative_patience(fixture96):
+    _, _, s3 = fixture96
+    with pytest.raises(ValueError, match="patience must be >= 0"):
+        solve(s3, backend="dense_parallel", stop="converged", patience=-1)
+
+
+def test_rejects_nonpositive_max_iterations(fixture96):
+    _, _, s3 = fixture96
+    with pytest.raises(ValueError, match="max_iterations must be >= 1"):
+        solve(s3, backend="dense_parallel", max_iterations=0)
+
+
+def test_rejects_bad_k_for_every_input_kind(fixture96):
+    """k is validated at solve() entry — before any backend dispatch —
+    for points and similarity inputs alike."""
+    x, _, s3 = fixture96
+    for bad in (0, -3, 96, 200):
+        with pytest.raises(ValueError, match="SolveConfig.k"):
+            solve(x, backend="dense_topk", k=bad)
+        with pytest.raises(ValueError, match="SolveConfig.k"):
+            solve(s3, backend="dense_topk", k=bad)
+
+
 def test_auto_backend_single_device(fixture96):
     x, _, _ = fixture96
     res = solve(x, max_iterations=15)

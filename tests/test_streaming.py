@@ -4,7 +4,9 @@ import numpy as np
 from repro.core.metrics import purity
 from repro.core.preferences import median_preference
 from repro.core.similarity import pairwise_similarity, set_preferences
-from repro.core.streaming import converged_ap, streaming_hap
+from repro.core.streaming import (
+    assign_nearest_exemplar, converged_ap, streaming_hap,
+)
 from repro.data import gaussian_blobs
 
 
@@ -25,6 +27,61 @@ def test_streaming_peak_state_is_shard_local():
     x, _ = gaussian_blobs(n=2000, k=5, seed=5)
     res = streaming_hap(x, shard_size=200, iterations=40)
     assert res.labels.max() + 1 == res.n_clusters
+
+
+# --------------------------------------------- second assignment pass edges
+def test_second_pass_single_global_exemplar():
+    """K = 1: every point must map to exemplar 0 and carry its own
+    (negative squared Euclidean) similarity to it."""
+    x, _ = gaussian_blobs(n=200, k=5, seed=8, box=12.0)
+    ex = x[17:18]
+    labels, best = assign_nearest_exemplar(x, ex)
+    assert np.all(labels == 0)
+    np.testing.assert_allclose(best, -((x - ex[0]) ** 2).sum(1),
+                               rtol=1e-4, atol=1e-3)
+    assert best[17] == 0.0                       # the exemplar itself
+
+
+def test_streaming_single_global_exemplar_absorbs_all_points():
+    """Strongly negative preferences (pref_scale >> 1) collapse the
+    exemplar hierarchy to a single global exemplar; the second pass must
+    assign every point (every shard) to it."""
+    x, _ = gaussian_blobs(n=240, k=3, seed=9, spread=0.5, box=4.0)
+    res = streaming_hap(x, shard_size=60, iterations=60, pref_scale=50.0)
+    assert res.n_clusters == 1
+    assert len(np.unique(res.exemplar_of)) == 1
+    assert np.all(res.labels == 0)
+    # and that single target is each point's nearest (only) exemplar
+    labels, _ = assign_nearest_exemplar(x, res.exemplar_points)
+    assert np.all(labels == 0)
+
+
+def test_second_pass_whole_shard_reassigns_away():
+    """With one global exemplar, every shard that did not produce it has
+    ALL its points reassigned away from their shard-local exemplar — the
+    exact failure mode the second pass exists to fix."""
+    x, _ = gaussian_blobs(n=240, k=3, seed=9, spread=0.5, box=4.0)
+    res = streaming_hap(x, shard_size=60, iterations=60, pref_scale=50.0)
+    assert res.n_clusters == 1
+    global_ex = int(np.unique(res.exemplar_of)[0])
+    shard_exemplars = np.unique(res.shard_exemplars)
+    losers = [e for e in shard_exemplars if e != global_ex]
+    assert losers, "need at least one shard whose exemplar lost"
+    for e in losers:
+        members = np.flatnonzero(res.shard_exemplars == e)
+        # every member (including the deposed local exemplar itself)
+        # now points at the global exemplar, not its shard exemplar
+        assert np.all(res.exemplar_of[members] == global_ex)
+        assert np.all(res.exemplar_of[members] != e)
+
+
+def test_second_pass_labels_are_nearest_exemplar():
+    """General invariant: streaming labels equal nearest-global-exemplar
+    assignment (the pass is idempotent on the result)."""
+    x, _ = gaussian_blobs(n=500, k=5, seed=10, spread=0.4, box=16.0)
+    res = streaming_hap(x, shard_size=128, iterations=60, pref_scale=0.25)
+    labels, _ = assign_nearest_exemplar(x, res.exemplar_points)
+    np.testing.assert_array_equal(labels, res.labels)
 
 
 def test_converged_ap_stops_early_and_matches_fixed():

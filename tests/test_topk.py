@@ -122,18 +122,39 @@ def test_full_coverage_parity_with_similarity_refinement(fixture96, mode):
     np.testing.assert_array_equal(res.exemplars, ref.exemplars)
 
 
-def test_oversized_k_clamps_to_lossless(fixture96, dense_ref96):
-    """k >= N - 1 clamps to full coverage rather than erroring."""
+def test_k_validation_rejects_out_of_range(fixture96):
+    """solve() validates k at the front door: k < 1 and k >= N are
+    errors with the problem size in the message; k = N - 1 (the lossless
+    maximum) still runs."""
     x, _ = fixture96
-    res = solve(x, backend="dense_topk", k=10_000, levels=3,
-                max_iterations=30, damping=0.6, preference="median")
-    np.testing.assert_array_equal(res.exemplars, dense_ref96.exemplars)
-
-
-def test_k_validation(fixture96):
-    x, _ = fixture96
-    with pytest.raises(ValueError, match="k must be"):
+    with pytest.raises(ValueError, match="k must be >= 1"):
         solve(x, backend="dense_topk", k=0)
+    with pytest.raises(ValueError, match="k must be < N"):
+        solve(x, backend="dense_topk", k=96)
+    with pytest.raises(ValueError, match="k must be < N"):
+        solve(x, backend="dense_topk", k=10_000)
+
+
+def test_sampled_preference_deterministic_under_seed():
+    """The N > 4096 string-preference dense subsample is seeded from
+    SolveConfig.seed: two identical runs agree bit-for-bit."""
+    from repro.solver.topk import build_from_points
+
+    x, _ = gaussian_blobs(n=4200, k=6, seed=9, spread=0.5)
+    import jax
+
+    key = jax.random.PRNGKey(7)
+    _, idx_a = build_from_points(jnp.asarray(x), 16, 1, key=key)
+    s_a, _ = build_from_points(jnp.asarray(x), 16, 1, key=key)
+    s_b, idx_b = build_from_points(jnp.asarray(x), 16, 1, key=key)
+    np.testing.assert_array_equal(np.asarray(s_a), np.asarray(s_b))
+    np.testing.assert_array_equal(np.asarray(idx_a), np.asarray(idx_b))
+    # the self slot carries the sampled preference: identical across runs
+    res1 = solve(x, backend="dense_topk", k=16, levels=1,
+                 max_iterations=4, seed=3, preference="median")
+    res2 = solve(x, backend="dense_topk", k=16, levels=1,
+                 max_iterations=4, seed=3, preference="median")
+    np.testing.assert_array_equal(res1.exemplars, res2.exemplars)
 
 
 # ----------------------------------------------------------------- quality
