@@ -41,10 +41,13 @@ def emit(name: str, rows: list, meta: dict | None = None,
     try:
         import jax
         backend = jax.default_backend()
-        n_devices = len(jax.devices())
+        devices = jax.devices()
+        n_devices = len(devices)
+        device_kind = devices[0].device_kind if devices else "unknown"
         jax_version = jax.__version__
     except Exception:  # bench records must never die on metadata
         backend, n_devices, jax_version = "unknown", 0, "unknown"
+        device_kind = "unknown"
     rec = {
         "bench": name,
         "rows": rows,
@@ -56,6 +59,9 @@ def emit(name: str, rows: list, meta: dict | None = None,
             "jax_version": jax_version,
             "jax_backend": backend,
             "n_devices": n_devices,
+            # device kind makes rows comparable across runners; sharded
+            # rows additionally carry the mesh shape they ran on
+            "device_kind": device_kind,
             **(meta or {}),
         },
     }

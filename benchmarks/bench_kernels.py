@@ -131,12 +131,85 @@ def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
     return rows
 
 
+def run_topk_build(tier: str) -> list:
+    """Top-k similarity build tier: the perf target of the fused/sharded
+    build PR. Times each build backend on the same blob suite so the
+    reference-vs-two-stage speedup is on record (``BENCH_topk_build.json``;
+    the smoke rows also ride the kernels gate).
+
+    Every row carries the mesh the build ran on (``[workers]``; the
+    sharded row runs the real shard_map driver) so records from
+    differently-sized runners stay comparable.
+    """
+    import jax.numpy as jnp
+
+    from repro.data import gaussian_blobs
+    from repro.kernels.topk_similarity import (
+        topk_similarity, topk_similarity_twostage)
+    from repro.kernels.topk_build_fused import topk_similarity_fused
+    from repro.launch.mesh import make_worker_mesh
+    from repro.solver.config import SolveConfig
+    from repro.solver.topk_build import sharded_topk_similarity
+
+    k = 32
+    n = 2048 if tier == "smoke" else 100_000
+    x, _ = gaussian_blobs(n=n, k=7, seed=0)
+    xj = jnp.asarray(x)
+    d = x.shape[1]
+    flops = 2 * n * n * d
+    bytes_ = (n * d + n * k) * 4
+    mesh = make_worker_mesh()
+    w = mesh.shape["workers"]
+
+    def row(name, fn, mesh_shape, reps):
+        # best-of-reps: shared-runner wall clocks flap tens of percent
+        # run-to-run, and the floor is the comparable number
+        jax.block_until_ready(fn(xj))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            jax.block_until_ready(fn(xj))
+            best = min(best, time.time() - t0)
+        return {"name": f"topk_build_{name}_n{n}_k{k}", "us": best * 1e6,
+                "flops": flops, "bytes": bytes_, "mesh": mesh_shape}
+
+    fast_reps = 3
+    rows = [
+        row("ref", lambda x_: topk_similarity(x_, k), [1],
+            reps=3 if tier == "smoke" else 1),
+        row("twostage", lambda x_: topk_similarity_twostage(x_, k), [1],
+            fast_reps),
+        row("sharded",
+            lambda x_: sharded_topk_similarity(x_, k, SolveConfig(),
+                                               mesh=mesh), [w],
+            fast_reps),
+    ]
+    # fused runs interpret-mode here (CPU container): a compile +
+    # correctness canary, only worth timing at a tiny size
+    nf = 256
+    xf = jnp.asarray(gaussian_blobs(n=nf, k=4, seed=1)[0])
+    t = _time(lambda x_: topk_similarity_fused(x_, 16), xf, reps=1)
+    rows.append({"name": f"topk_build_fused_interp_n{nf}_k16",
+                 "us": t * 1e6, "flops": 2 * nf * nf * 2,
+                 "bytes": (nf * 2 + nf * 16) * 4, "mesh": [1]})
+    ref_us = rows[0]["us"]
+    two_us = rows[1]["us"]
+    print(f"topk_build n={n} k={k}: reference {ref_us / 1e6:.2f}s, "
+          f"twostage {two_us / 1e6:.2f}s "
+          f"({ref_us / max(two_us, 1e-9):.1f}x)")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes / 1 rep: CI compile-regression check")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="override the BENCH_kernels.json output path")
+    ap.add_argument("--topk-build-tier", default=None,
+                    choices=["smoke", "full", "skip"],
+                    help="top-k build bench tier (default: smoke, full "
+                         "sizes in the nightly trajectory)")
     args = ap.parse_args(argv)
     if args.smoke:
         # reps=3 and non-tiny sizes: single-rep sub-millisecond timings
@@ -145,11 +218,19 @@ def main(argv=None):
         rows = run(n=256, reps=3, sweep_n=192, sweep_iters=2)
     else:
         rows = run()
+    build_tier = args.topk_build_tier or "smoke"
+    build_rows = [] if build_tier == "skip" else run_topk_build(build_tier)
+    if build_tier == "smoke":
+        # smoke build rows ride the kernels record so the committed
+        # baseline_smoke.json gates build-path regressions on PRs
+        rows = rows + build_rows
     for r in rows:
         ai = r["flops"] / r["bytes"]
         print(f"kernel_{r['name']},{r['us']:.0f},"
               f"flops={r['flops']:.2e} ai={ai:.2f}")
     path = emit("kernels", rows, meta={"smoke": args.smoke})
+    if build_rows:
+        emit("topk_build", build_rows, meta={"tier": build_tier})
     if args.json and args.json != path:
         import shutil
         shutil.copy(path, args.json)

@@ -76,16 +76,25 @@ class BucketRouter:
             self._buckets.sort()
         return bucket
 
-    def route(self, n: int, d: int) -> Optional[Bucket]:
+    def route(self, n: int, d: int, *,
+              max_grow_n: Optional[int] = None) -> Optional[Bucket]:
         """Smallest-n bucket fitting (n, d); grows the table when allowed.
-        Returns None only when ``auto=False`` and nothing fits."""
+
+        Explicitly registered buckets always route, whatever their size.
+        ``max_grow_n`` caps only *auto growth*: when the next power-of-two
+        edge would exceed it, no bucket is minted and None is returned
+        (the service's overflow path takes over). Returns None when
+        nothing fits and growth is off or capped out."""
         fits = [b for b in self._buckets if n <= b.n and d <= b.d]
         if fits:
             # smallest padded area -> least wasted compute
             return min(fits, key=lambda b: (b.n, b.d))
         if not self.auto:
             return None
-        return self.add(Bucket(_next_pow2(n), d, self.default_batch))
+        grown = _next_pow2(n)
+        if max_grow_n is not None and grown > max_grow_n:
+            return None
+        return self.add(Bucket(grown, d, self.default_batch))
 
     # ------------------------------------------------------------ padding
     @staticmethod

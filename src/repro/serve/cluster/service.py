@@ -15,7 +15,11 @@ service:
 * an incremental fast path per logical stream: once a stream has a full
   solve, new points are assigned to its exemplar set in O(n * K)
   (``incremental.py``), and a drift threshold triggers a background full
-  re-solve.
+  re-solve;
+* big-N overflow routing: a request larger than every bucket the service
+  will compile (``max_bucket_n``) runs as one direct ``dense_topk``
+  solve with a capped neighbor count (``overflow_k``) — served, not
+  rejected, and without growing the compile cache.
 
 Pumping is explicit or threaded: call ``drain()`` to process the queue on
 the caller's thread (deterministic — what the tests and benchmarks use),
@@ -80,6 +84,7 @@ class ServiceStats:
     micro_batches: int = 0
     batched_requests: int = 0          # full solves that shared a batch
     resolves_triggered: int = 0
+    overflow_solves: int = 0           # big-N requests routed to dense_topk
     cache: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> dict:
@@ -94,7 +99,9 @@ class ClusterService:
                  buckets=(), auto_bucket: bool = True, max_batch: int = 8,
                  max_wait_ms: float = 2.0, drift_threshold: float = 0.25,
                  drift_halflife: int = 256,
-                 stream_max_points: int = 100_000):
+                 stream_max_points: int = 100_000,
+                 max_bucket_n: int = 4096, overflow: str = "route",
+                 overflow_k: int = 64):
         cfg = config or SolveConfig(stop="converged", max_iterations=100)
         # fail at construction, not mid-traffic: the batched dense path
         # ignores sparse-topk k, so a config carrying it is a mistake
@@ -104,12 +111,24 @@ class ClusterService:
                 "micro-batched path runs dense solves and would silently "
                 "ignore it — leave k=None (route big-N work to solve())")
         validate_config(cfg, n=2**30)
+        if overflow not in ("route", "reject"):
+            raise ValueError(f"overflow must be 'route' or 'reject'; "
+                             f"got {overflow!r}")
         self.config = cfg
         self.router = BucketRouter(buckets, auto=auto_bucket,
                                    default_batch=max_batch)
         self.cache = CompileCache()
         self.stats = ServiceStats()
         self.max_wait_ms = float(max_wait_ms)
+        # big-N overflow: requests past the largest bucket the service
+        # will compile go to a direct dense_topk solve (capped k, O(n*k)
+        # state) instead of being rejected or growing an unbounded
+        # micro-batch executable
+        self.max_bucket_n = int(max_bucket_n)
+        self.overflow = overflow
+        self.overflow_k = int(overflow_k)
+        self._overflow_queue: "deque[_Pending]" = deque()
+        self._overflow_turn = True
         self._drift_threshold = drift_threshold
         self._drift_halflife = drift_halflife
         self._stream_max_points = stream_max_points
@@ -246,11 +265,26 @@ class ClusterService:
         return st
 
     def _enqueue(self, req: _Pending) -> None:
-        bucket = self.router.route(req.n, req.points.shape[1])
+        # explicitly provisioned buckets always win (whatever their
+        # size); max_bucket_n caps only auto-growth, so overflow takes
+        # whatever no warmed executable covers
+        bucket = self.router.route(req.n, req.points.shape[1],
+                                   max_grow_n=self.max_bucket_n)
         if bucket is None:
+            # bucket overflow: n is past every compiled shape and past
+            # what auto-growth may mint. Route to a direct sparse
+            # dense_topk solve instead of rejecting — O(n * k) state,
+            # no new compile-cache entry.
+            if self.overflow == "route":
+                with self._work:
+                    self._overflow_queue.append(req)
+                    self._work.notify()
+                return
             req.future.set_exception(ValueError(
-                f"no bucket fits request shape {req.points.shape} and "
-                "auto_bucket is off; add one via warmup(shapes=...)"))
+                f"no bucket fits request shape {req.points.shape} "
+                f"(max_bucket_n={self.max_bucket_n}) and overflow "
+                "routing is off; add a bucket via warmup(shapes=...) or "
+                "construct the service with overflow='route'"))
             return
         with self._work:
             self._queues.setdefault(bucket.key, deque()).append(req)
@@ -291,9 +325,11 @@ class ClusterService:
     def _loop(self) -> None:
         while True:
             with self._work:
-                while self._running and not self._queues:
+                while (self._running and not self._queues
+                       and not self._overflow_queue):
                     self._work.wait(0.1)
-                if not self._running and not self._queues:
+                if (not self._running and not self._queues
+                        and not self._overflow_queue):
                     return
             # brief gather window so near-simultaneous requests share a
             # batch instead of each riding alone
@@ -306,8 +342,17 @@ class ClusterService:
     def _grab_batch(self):
         """Pop up to ``batch`` requests from the oldest non-empty bucket
         queue. FIFO across buckets keeps tail latency bounded under a
-        skewed mix."""
+        skewed mix. Overflow requests ride alone (``bucket=None``) and
+        alternate with bucketed work — strict priority either way would
+        let one traffic class starve the other (an overflow solve is
+        seconds; a heavy overflow stream must not wedge cheap
+        micro-batches, nor vice versa)."""
         with self._work:
+            if self._overflow_queue and (self._overflow_turn
+                                         or not self._queues):
+                self._overflow_turn = False
+                return None, [self._overflow_queue.popleft()]
+            self._overflow_turn = True
             for key in list(self._queues):
                 q = self._queues[key]
                 if not q:
@@ -319,11 +364,19 @@ class ClusterService:
                 if not q:
                     del self._queues[key]
                 return bucket, reqs
+            if self._overflow_queue:
+                # bucket queues turned out empty — don't strand overflow
+                self._overflow_turn = False
+                return None, [self._overflow_queue.popleft()]
             return None
 
     # ------------------------------------------------------ micro-batch
-    def _run_batch(self, bucket: Bucket, reqs) -> None:
-        """Pad, run the bucket's compiled solve once, finish each rider."""
+    def _run_batch(self, bucket: Optional[Bucket], reqs) -> None:
+        """Pad, run the bucket's compiled solve once, finish each rider.
+        ``bucket=None`` is an overflow request: one direct sparse solve."""
+        if bucket is None:
+            self._run_overflow(reqs[0])
+            return
         t0 = time.perf_counter()
         try:
             solver = self.cache.get(bucket, self.config)
@@ -363,6 +416,75 @@ class ClusterService:
                     path="full", labels=result.labels[0], solve=result,
                     bucket=bucket.key, stream=r.stream, generation=gen,
                     queue_ms=(t0 - r.submitted) * 1e3, solve_ms=dt))
+
+    # -------------------------------------------------------- overflow
+    def _overflow_preference(self, pts: np.ndarray) -> float:
+        """The preference the routed dense_topk solve effectively uses,
+        for stream drift detection — replicating ``build_from_points``'s
+        own branches (stored-top-k statistic up to the build's exact-N
+        threshold, dense-subsample estimate with the same seed fold past
+        it); numeric strategies are themselves."""
+        strategy = self.config.preference
+        if strategy is None:
+            return 0.0
+        if not isinstance(strategy, str):
+            return float(np.min(np.asarray(strategy)))
+        if strategy in ("median", "range_mid"):
+            import jax
+
+            import jax.numpy as jnp
+
+            from repro.kernels.topk_similarity import topk_similarity
+            from repro.solver.topk import (
+                PREF_EXACT_N, sampled_preferences, topk_preferences,
+            )
+            pts = np.asarray(pts, np.float32)
+            n = pts.shape[0]
+            k = min(self.overflow_k, n - 1)
+            if n > PREF_EXACT_N and k < n - 1:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.config.seed), 0x5eed)
+                return float(np.asarray(sampled_preferences(
+                    pts, strategy, self.config.metric, key))[0])
+            vals, _ = topk_similarity(jnp.asarray(pts), k,
+                                      metric=self.config.metric)
+            return float(np.asarray(topk_preferences(vals, strategy))[0])
+        return 0.0
+
+    def _run_overflow(self, req: _Pending) -> None:
+        """Big-N request -> one dense_topk solve with a capped neighbor
+        count; same response/stream contract as the batched path."""
+        from repro.solver import solve
+
+        t0 = time.perf_counter()
+        try:
+            cfg = self.config.replace(
+                backend="dense_topk", k=min(self.overflow_k, req.n - 1),
+                input_kind="points")
+            result = solve(req.points, cfg)
+        except Exception as exc:
+            if req.internal and req.stream is not None:
+                with self._lock:
+                    st = self._streams.get(req.stream)
+                if st is not None:
+                    with st.lock:
+                        st.resolve_pending = False
+            if not req.future.done():
+                req.future.set_exception(exc)
+            return
+        dt = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self.stats.overflow_solves += 1
+            self.stats.full_solves += 1
+        gen = None
+        if req.stream is not None:
+            gen = self._install_stream(
+                req, result, self._overflow_preference(req.points))
+        if not req.future.done():
+            req.future.set_result(ClusterResponse(
+                path="full", labels=result.labels[0], solve=result,
+                bucket=None, stream=req.stream, generation=gen,
+                queue_ms=(t0 - req.submitted) * 1e3, solve_ms=dt))
 
     def _install_stream(self, r: _Pending, result: SolveResult,
                         pref: float) -> int:

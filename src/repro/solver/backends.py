@@ -83,7 +83,7 @@ def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
         s3k, idx = topk.build_from_points(
             arr, k, cfg.levels, metric=cfg.metric,
             preference=cfg.preference,
-            key=jax.random.PRNGKey(cfg.seed))
+            key=jax.random.PRNGKey(cfg.seed), config=cfg)
     state, e, n_sweeps, conv, trace = topk.run_topk(
         s3k, idx, max_iterations=cfg.max_iterations, damping=cfg.damping,
         kappa=cfg.kappa, s_mode=cfg.s_mode, stop=cfg.stop,

@@ -69,6 +69,16 @@ class SolveConfig:
     # O(L*N*k) against the dense O(L*N^2).
     k: Optional[int] = None
 
+    # dense_topk similarity build (repro.solver.topk_build). "auto"
+    # resolves per problem/host: sharded on multi-device hosts, the
+    # Pallas fused kernel on TPU, the threshold-gated two-stage merge
+    # for big single-device builds, reference otherwise. Every backend
+    # produces the identical edge set — this knob is throughput only.
+    build: str = "auto"            # auto|reference|twostage|fused|sharded
+    build_block_rows: int = 1024   # rows per build tile
+    build_block_cols: int = 4096   # cols per reference/fused tile
+    build_chunk: int = 128         # kd-cell width (two-stage/sharded gate)
+
     # distributed backends (mr1d_*, mr2d)
     mesh: Optional[Any] = None          # jax Mesh; auto-built when None
     pad_to: Optional[int] = None        # force-pad N to a multiple (tests)

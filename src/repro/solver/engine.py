@@ -56,6 +56,17 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
         raise ValueError(
             "SolveConfig.max_iterations must be >= 1 "
             f"(got {cfg.max_iterations})")
+    from repro.solver.topk_build import BUILD_BACKENDS
+    if cfg.build not in BUILD_BACKENDS:
+        raise ValueError(
+            f"SolveConfig.build must be one of {BUILD_BACKENDS}; "
+            f"got {cfg.build!r}")
+    if cfg.build_block_rows < 1 or cfg.build_block_cols < 1 \
+            or cfg.build_chunk < 1:
+        raise ValueError(
+            "SolveConfig.build_block_rows/build_block_cols/build_chunk "
+            f"must be >= 1 (got {cfg.build_block_rows}/"
+            f"{cfg.build_block_cols}/{cfg.build_chunk})")
 
 
 # ------------------------------------------------------------------ input
@@ -106,13 +117,20 @@ def _factor_2d(ndev: int) -> tuple[int, int]:
     return rows, ndev // rows
 
 
-def _prepare_mesh(spec, cfg: SolveConfig):
-    """-> (mesh, pad multiple) for distributed backends."""
+def _prepare_mesh(kind, cfg: SolveConfig):
+    """-> (mesh, pad multiple) for distributed execution.
+
+    ``kind`` is ``"1d"`` / ``"2d"`` or a BackendSpec carrying
+    ``mesh_kind`` — the sharded top-k build driver passes the string
+    directly (it shards rows over a 1-D worker mesh without being a
+    registered mesh backend itself)."""
     from repro.launch.mesh import make_worker_mesh
     from repro.sharding.compat import make_mesh
 
+    if not isinstance(kind, str):
+        kind = kind.mesh_kind
     mesh = cfg.mesh
-    if spec.mesh_kind == "1d":
+    if kind == "1d":
         if mesh is None:
             mesh = make_worker_mesh()
         # run_mrhap's collectives are written against these axis names

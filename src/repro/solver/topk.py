@@ -31,7 +31,7 @@ from repro.kernels.topk_ops import (
     alpha_topk, assignments_topk, c_topk, phi_topk, rho_topk, s_next_topk,
     tau_topk,
 )
-from repro.kernels.topk_similarity import topk_from_dense, topk_similarity
+from repro.kernels.topk_similarity import topk_from_dense
 from repro.solver import dense
 
 #: default neighbors per row (excluding self) when ``SolveConfig.k`` is
@@ -137,14 +137,21 @@ def _with_self_slot(vals, idx, pref):
 
 def build_from_points(x: jnp.ndarray, k: int, levels: int, *,
                       metric: str = "neg_sqeuclidean", preference="median",
-                      key=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      key=None, config=None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Points -> ((L, N, kk) value stack, (N, kk) index map) without ever
-    materializing the N x N matrix (tiled build)."""
+    materializing the N x N matrix.
+
+    The build itself runs through ``repro.solver.topk_build`` —
+    ``config.build`` picks reference / two-stage / fused / sharded, all
+    bit-identical; ``config`` defaults to an auto-select SolveConfig for
+    direct callers."""
+    from repro.solver.config import SolveConfig
+    from repro.solver.topk_build import build_topk_similarity
+
     x = jnp.asarray(x, jnp.float32)
     n = x.shape[0]
-    use_pallas = (jax.default_backend() == "tpu"
-                  and metric == "neg_sqeuclidean")
-    vals, idx = topk_similarity(x, k, metric=metric, use_pallas=use_pallas)
+    cfg = (config or SolveConfig()).replace(metric=metric)
+    vals, idx = build_topk_similarity(x, k, cfg)
     if (preference in ("median", "range_mid") and n > PREF_EXACT_N
             and k < n - 1):
         if key is None:

@@ -112,10 +112,60 @@ def test_micro_batch_riders_match_solo_runs(service):
                                       ref.exemplars)
 
 
-def test_unroutable_without_auto_bucket_errors(service):
-    fut = service.submit(np.zeros((500, 2), np.float32))
+def test_unroutable_rejects_only_when_overflow_off():
+    svc = ClusterService(config=CFG, buckets=[(64, 2, 4)],
+                         auto_bucket=False, overflow="reject")
+    fut = svc.submit(np.zeros((500, 2), np.float32))
     with pytest.raises(ValueError, match="no bucket fits"):
         fut.result(timeout=5)
+
+
+# --------------------------------------------------------- big-N overflow
+def test_overflow_routes_to_dense_topk(service):
+    """A request past every bucket runs as one direct dense_topk solve
+    (capped k): served with the same response contract, no new compiled
+    executable, counted in overflow stats."""
+    x, _ = _blobs(500, seed=11)
+    compiled_before = service.snapshot()["compiled"]
+    res = service.solve_sync(x)
+    assert res.path == "full" and res.bucket is None
+    assert res.solve.backend == "dense_topk"
+    ref = solve(x, backend="dense_topk", k=min(service.overflow_k, 499),
+                stop="converged", max_iterations=80, damping=0.6,
+                levels=2, preference="median")
+    np.testing.assert_array_equal(res.solve.exemplars, ref.exemplars)
+    np.testing.assert_array_equal(res.labels, ref.labels[0])
+    snap = service.snapshot()
+    assert snap["overflow_solves"] >= 1
+    assert snap["compiled"] == compiled_before   # no cache growth
+
+
+def test_explicit_large_bucket_beats_overflow():
+    """A provisioned bucket larger than max_bucket_n still routes — the
+    cap bounds auto-growth, never explicitly warmed executables."""
+    svc = ClusterService(config=CFG, buckets=[(512, 2, 4)],
+                         auto_bucket=False, max_bucket_n=128)
+    svc.submit(np.zeros((300, 2), np.float32))
+    assert (512, 2, 4) in svc._queues and not svc._overflow_queue
+
+
+def test_auto_growth_respects_cap_for_non_pow2():
+    """Power-of-two growth must not mint an executable above the cap."""
+    r = BucketRouter([], auto=True)
+    assert r.route(2500, 2, max_grow_n=3000) is None
+    assert r.route(2500, 2).n == 4096      # uncapped growth unchanged
+
+
+def test_overflow_cap_beats_auto_bucket_growth():
+    """Even with auto bucketing on, n past max_bucket_n must not mint an
+    enormous micro-batch executable — it overflows to the sparse path."""
+    svc = ClusterService(config=CFG, auto_bucket=True, max_bucket_n=128,
+                         overflow_k=16)
+    x, _ = _blobs(300, seed=12)
+    res = svc.solve_sync(x)
+    assert res.bucket is None and res.solve.backend == "dense_topk"
+    assert all(b.n <= 128 for b in svc.router.buckets)
+    assert svc.snapshot()["overflow_solves"] == 1
 
 
 def test_single_point_request_is_trivial(service):
