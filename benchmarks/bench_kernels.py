@@ -128,6 +128,21 @@ def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
     rows.append({"name": f"hap_sweep_topk_n{n}_k{k}", "us": t * 1e6,
                  "flops": 2 * 4 * 3 * n * (k + 1),
                  "bytes": 2 * 4 * 3 * n * (k + 1) * 4})
+
+    # the row-sharded sweep program (repro.solver.topk_sharded) on the
+    # host mesh: with one CI device this times the full shard_map/
+    # collective machinery at W=1 — a compile + dispatch-overhead canary
+    # for the distributed path (real 8-worker runs: nightly slow tier)
+    from repro.launch.mesh import make_worker_mesh
+    from repro.solver.topk_sharded import run_topk_sharded
+    mesh = make_worker_mesh()
+    fn = lambda s3k_: run_topk_sharded(s3k_, idx, mesh,
+                                       max_iterations=iters, damping=0.6)[1]
+    t = _time(fn, s3k, reps=reps) / iters
+    rows.append({"name": f"hap_sweep_topk_sharded_n{n}_k{k}", "us": t * 1e6,
+                 "flops": 2 * 4 * 3 * n * (k + 1),
+                 "bytes": 2 * 4 * 3 * n * (k + 1) * 4,
+                 "mesh": [mesh.shape["workers"]]})
     return rows
 
 

@@ -22,6 +22,18 @@ recorded as ``skipped``: 3 * L * N^2 f32 message tensors at N = 2e5
 would be ~1 TB); ``dense_topk`` keeps O(L*N*k) state and runs the full
 range — the paper's linear-complexity headline realized on one device.
 
+``topk_sweep`` — the sharded *sweep* column (ISSUE 6): the dense_topk
+Jacobi loop timed single-device vs row-sharded over 8 forced host
+devices (subprocess workers, ``_topk_sweep_worker.py``), N swept to
+10^6 on a synthesized compressed layout. As with the ``mrhap`` suite,
+wall clock over forced devices on this 1-core container measures
+dispatch/collective overhead, not speedup; the scaling claim lives in
+the recorded analytic columns — ``state_bytes_per_device`` drops by the
+worker count (the psum exchange keeps every per-device buffer O(N/W*k) +
+O(N)), which is what raises the memory-bound max-N by ~W at fixed
+per-device budget — plus the measured fact that the sharded program
+*runs* the same N bit-exactly (nightly parity check).
+
     PYTHONPATH=src python benchmarks/bench_scaling.py [--tier smoke|full]
 """
 from __future__ import annotations
@@ -40,6 +52,8 @@ except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
     from _emit import emit
 
 WORKER = os.path.join(os.path.dirname(__file__), "_scaling_worker.py")
+SWEEP_WORKER = os.path.join(os.path.dirname(__file__),
+                            "_topk_sweep_worker.py")
 
 #: N above which the dense O(L*N^2) backends are skipped (not attempted):
 #: at 8192 the three (2, N, N) f32 message tensors already take ~1.6 GB;
@@ -107,6 +121,38 @@ def run_topk_scaling(sizes=(1024, 4096, 16384, 65536, 200_000), k: int = 32,
     return rows
 
 
+def run_sweep_scaling(sizes=(65536, 262144, 1_000_000), k: int = 16,
+                      levels: int = 2, iterations: int = 3,
+                      sharded_workers: int = 8,
+                      exchange: str = "auto") -> list:
+    """1-vs-8-device sharded-sweep N sweep (the ``topk_sweep`` suite).
+
+    Each configuration runs in a subprocess with its own forced device
+    count; rows carry the resolved exchange and the analytic per-device
+    state / per-sweep communication columns next to the measured wall
+    time.
+    """
+    env_base = dict(os.environ)
+    env_base["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env_base.get("PYTHONPATH", "")])
+    rows = []
+    for n in sizes:
+        for sweep, w in (("single", 1), ("sharded", sharded_workers)):
+            env = dict(env_base)
+            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={w}"
+            out = subprocess.run(
+                [sys.executable, SWEEP_WORKER, str(n), str(k), str(levels),
+                 str(iterations), sweep, exchange], env=env,
+                capture_output=True, text=True, timeout=3000)
+            if out.returncode != 0:
+                raise RuntimeError(out.stderr[-2000:])
+            rec = json.loads(out.stdout.strip().splitlines()[-1])
+            rec["suite"] = "topk_sweep"
+            rows.append(rec)
+    return rows
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser()
@@ -118,9 +164,12 @@ def main(argv=None):
         mr_rows = run(n=256, iterations=10, worker_counts=(1, 2))
         topk_rows = run_topk_scaling(sizes=(512, 2048, 4096), k=16,
                                      iterations=10, dense_cap=2048)
+        sweep_rows = run_sweep_scaling(sizes=(4096, 16384), k=16,
+                                       iterations=5, sharded_workers=2)
     else:
         mr_rows = run()
         topk_rows = run_topk_scaling()
+        sweep_rows = run_sweep_scaling()
     for r in mr_rows:
         r["suite"] = "mrhap"
         print(f"mrhap_scaling_{r['mode']}_w{r['workers']},"
@@ -135,7 +184,12 @@ def main(argv=None):
         else:
             print(f"scaling_{r['backend']}_n{r['n']},skipped,"
                   f"state={r['state_bytes']}B ({r['reason']})")
-    rows = mr_rows + topk_rows
+    for r in sweep_rows:
+        print(f"sweep_{r['sweep']}_n{r['n']}_w{r['workers']},"
+              f"{r['us_per_sweep']:.0f},"
+              f"state/dev={r['state_bytes_per_device']}B "
+              f"comm={r['comm_bytes_sweep']}B exch={r['exchange']}")
+    rows = mr_rows + topk_rows + sweep_rows
     emit("scaling", rows, meta={"tier": args.tier})
     return rows
 

@@ -43,6 +43,19 @@ def rho_topk(s: jnp.ndarray, a: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
     return s + jnp.minimum(tau[:, None], -row_max_excl)
 
 
+def col_partial_topk(r: jnp.ndarray, idx: jnp.ndarray,
+                     n_total: int) -> jnp.ndarray:
+    """A row block's contributions to the (n_total,) availability column
+    sum: scatter of max(0, rho) over the block's stored edges, self slot
+    excluded. On one device (``n_total == N``, all rows) this IS the full
+    column statistic; a row-sharded sweep psums the per-shard partials
+    (or all-gathers rho and scatters the full edge set at once — the
+    bit-exact exchange, same accumulation order as this single scatter).
+    """
+    rp = jnp.maximum(r, 0.0).at[:, 0].set(0.0)      # self slot excluded
+    return jnp.zeros((n_total,), r.dtype).at[idx.ravel()].add(rp.ravel())
+
+
 def col_stats_topk(r: jnp.ndarray, idx: jnp.ndarray
                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Column statistics over incoming edges (the scatter/segment sum).
@@ -53,28 +66,48 @@ def col_stats_topk(r: jnp.ndarray, idx: jnp.ndarray
     rows that actually keep an edge to j contribute — exactly the dense
     sum when absent responsibilities are -inf (clamped to 0).
     """
-    rp = jnp.maximum(r, 0.0).at[:, 0].set(0.0)      # self slot excluded
-    col = jnp.zeros((r.shape[0],), r.dtype).at[idx.ravel()].add(rp.ravel())
-    return col, r[:, 0]
+    return col_partial_topk(r, idx, r.shape[0]), r[:, 0]
+
+
+def alpha_from_stats(r: jnp.ndarray, idx: jnp.ndarray, col: jnp.ndarray,
+                     base: jnp.ndarray, rdiag: jnp.ndarray) -> jnp.ndarray:
+    """Eq 2.2/2.3 for a row block given full-length column statistics.
+
+    ``r``/``idx`` may be any row slice; ``col`` (availability column
+    sums), ``base`` (c + phi) and ``rdiag`` (rho self slot) are indexed
+    by *global* column id, so a sharded caller hands in the exchanged
+    full-length vectors and the local caller its own (N,) statistics —
+    identical arithmetic either way (the self-slot gather is an identity
+    gather on one device).
+    """
+    base_j = base[idx]
+    col_j = col[idx]
+    rp = jnp.maximum(r, 0.0)
+    a_off = jnp.minimum(0.0, base_j + rdiag[idx] + col_j - rp)
+    rows = idx[:, 0]                                 # global row per block row
+    a_self = base[rows] + col[rows]                  # diagonal rule, no clamp
+    return a_off.at[:, 0].set(a_self)
 
 
 def alpha_topk(r: jnp.ndarray, c: jnp.ndarray, phi: jnp.ndarray,
                idx: jnp.ndarray) -> jnp.ndarray:
     """Eq 2.2/2.3 on stored entries via gathered column statistics."""
     col, rdiag = col_stats_topk(r, idx)
-    base = c + phi                                   # (N,) indexed by target
-    base_j = base[idx]
-    col_j = col[idx]
-    rp = jnp.maximum(r, 0.0)
-    a_off = jnp.minimum(0.0, base_j + rdiag[idx] + col_j - rp)
-    a_self = base + col                              # diagonal rule, no clamp
-    return a_off.at[:, 0].set(a_self)
+    return alpha_from_stats(r, idx, col, c + phi, rdiag)
+
+
+def tau_from_stats(c: jnp.ndarray, rdiag: jnp.ndarray,
+                   col: jnp.ndarray) -> jnp.ndarray:
+    """Eq 2.4 for a row block: all three operands aligned to the block's
+    rows (a sharded caller gathers its rows out of the exchanged column
+    sum first)."""
+    return c + rdiag + col
 
 
 def tau_topk(r: jnp.ndarray, c: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     """Eq 2.4: tau_j^{l+1} = c_j + rho_jj + sum_{k!=j} max(0, rho_kj)."""
     col, rdiag = col_stats_topk(r, idx)
-    return c + rdiag + col
+    return tau_from_stats(c, rdiag, col)
 
 
 def phi_topk(a: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
@@ -102,8 +135,8 @@ def s_next_topk(s_next: jnp.ndarray, a: jnp.ndarray, r: jnp.ndarray,
     return out.at[:, 0].set(s_next[:, 0])
 
 
-def assignments_topk(a: jnp.ndarray, r: jnp.ndarray,
-                     idx: jnp.ndarray) -> jnp.ndarray:
+def assignments_topk(a: jnp.ndarray, r: jnp.ndarray, idx: jnp.ndarray,
+                     n_total: int | None = None) -> jnp.ndarray:
     """Eq 2.8 decode: argmax of (alpha + rho) over stored positions,
     mapped back to global column indices.
 
@@ -111,9 +144,13 @@ def assignments_topk(a: jnp.ndarray, r: jnp.ndarray,
     first, i.e. lowest, column) — stored-position order puts the self
     slot first, which would pick column i over a tied column j < i and
     silently break the k = N-1 bit-parity contract on duplicate points.
+
+    ``n_total`` is the global point count when ``a``/``r``/``idx`` are a
+    row *shard*: the non-maximal sentinel must sit past every global
+    column, not just past the shard's row count.
     """
     v = a + r
     m = jnp.max(v, axis=1, keepdims=True)
-    n = idx.shape[0]
+    n = idx.shape[0] if n_total is None else n_total
     cand = jnp.where(v == m, idx, n)       # non-maximal -> past any column
     return jnp.min(cand, axis=1).astype(jnp.int32)

@@ -78,6 +78,50 @@ def pvary(x, axis_names):
     return x
 
 
+def _distributed_client_live() -> bool:
+    if hasattr(jax.distributed, "is_initialized"):
+        return bool(jax.distributed.is_initialized())
+    try:  # 0.4.x: no public predicate; the client handle is the signal
+        from jax._src.distributed import global_state
+        return global_state.client is not None
+    except Exception:
+        return False
+
+
+def maybe_init_distributed() -> bool:
+    """Join a multi-process jax cluster iff the environment describes one.
+
+    A multi-process launch (one process per host, each seeing its local
+    devices) must call ``jax.distributed.initialize`` before any mesh is
+    built so ``jax.devices()`` spans the whole cluster. Launchers say so
+    through the standard variables ``JAX_COORDINATOR_ADDRESS`` /
+    ``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID`` (``COORDINATOR_ADDRESS``
+    etc. accepted as fallbacks, matching jax's own env lookup).
+
+    Single-process runs — no coordinator advertised, or an advertised
+    process count of 1 — are a strict no-op: nothing is initialized and
+    the function returns False, so calling this unconditionally from the
+    engine is always safe. Returns True when a cluster is (or already
+    was) initialized; repeated calls are idempotent.
+    """
+    import os
+
+    if _distributed_client_live():
+        return True
+    addr = (os.environ.get("JAX_COORDINATOR_ADDRESS")
+            or os.environ.get("COORDINATOR_ADDRESS"))
+    nproc = (os.environ.get("JAX_NUM_PROCESSES")
+             or os.environ.get("NUM_PROCESSES"))
+    if not addr or not nproc or int(nproc) < 2:
+        return False
+    pid = (os.environ.get("JAX_PROCESS_ID")
+           or os.environ.get("PROCESS_ID") or "0")
+    jax.distributed.initialize(coordinator_address=addr,
+                               num_processes=int(nproc),
+                               process_id=int(pid))
+    return True
+
+
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
               devices=None):
     """``jax.make_mesh`` with every axis in Auto mode on any jax version."""

@@ -73,6 +73,16 @@ def _divisible_spec(spec: P, shape, mesh: Mesh) -> P:
     return P(*out)
 
 
+def device_put_row_sharded(x, mesh: Mesh, axis_name: str, *, axis: int = 0):
+    """Place ``x`` with one contiguous row block per device along ``axis``
+    (all other dims replicated) — the input layout every row-sharded
+    ``shard_map`` program expects. Placing before the jit call keeps the
+    dispatch from first replicating the full array onto every device."""
+    spec = [None] * x.ndim
+    spec[axis] = axis_name
+    return jax.device_put(x, NamedSharding(mesh, P(*spec)))
+
+
 def shape_safe_shardings(mesh: Mesh, sds_tree: Any, spec_tree: Any) -> Any:
     """NamedShardings whose specs are both axis-filtered and
     shape-divisibility-safe for the given ShapeDtypeStruct tree."""

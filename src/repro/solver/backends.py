@@ -69,10 +69,12 @@ register_backend(BackendSpec(
 def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
     """Compressed-layout Jacobi sweeps; O(L*N*k) state instead of
     O(L*N^2). Accepts raw points (tiled top-k build, the N x N matrix is
-    never materialized) or a similarity stack (row-wise compression)."""
+    never materialized) or a similarity stack (row-wise compression).
+    ``cfg.sweep`` routes the loop itself: single-device, or row-sharded
+    over the workers mesh (``repro.solver.topk_sharded``)."""
     import jax
 
-    from repro.solver import topk
+    from repro.solver import topk, topk_sharded
 
     arr = jnp.asarray(data)
     n = arr.shape[1] if arr.ndim == 3 else arr.shape[0]
@@ -84,10 +86,26 @@ def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
             arr, k, cfg.levels, metric=cfg.metric,
             preference=cfg.preference,
             key=jax.random.PRNGKey(cfg.seed), config=cfg)
-    state, e, n_sweeps, conv, trace = topk.run_topk(
-        s3k, idx, max_iterations=cfg.max_iterations, damping=cfg.damping,
-        kappa=cfg.kappa, s_mode=cfg.s_mode, stop=cfg.stop,
-        patience=cfg.patience)
+
+    sweep_mode = topk_sharded.resolve_sweep(cfg.sweep, n=n)
+    if sweep_mode == "sharded":
+        from repro.solver.engine import _prepare_mesh
+        mesh, _ = _prepare_mesh("1d", cfg)
+        if mesh.shape["workers"] == 1:
+            # a 1-worker shard_map pays collective/dispatch overhead to
+            # shard nothing (the build had the same regression) — the
+            # single-device loop is the same arithmetic, minus the detour
+            sweep_mode = "single"
+    if sweep_mode == "sharded":
+        state, e, n_sweeps, conv, trace = topk_sharded.run_topk_sharded(
+            s3k, idx, mesh, max_iterations=cfg.max_iterations,
+            damping=cfg.damping, kappa=cfg.kappa, s_mode=cfg.s_mode,
+            stop=cfg.stop, patience=cfg.patience, exchange=cfg.exchange)
+    else:
+        state, e, n_sweeps, conv, trace = topk.run_topk(
+            s3k, idx, max_iterations=cfg.max_iterations, damping=cfg.damping,
+            kappa=cfg.kappa, s_mode=cfg.s_mode, stop=cfg.stop,
+            patience=cfg.patience)
     n_sweeps = int(n_sweeps)
     converged = bool(conv) if cfg.stop == "converged" else None
     return RawBackendResult(

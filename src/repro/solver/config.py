@@ -79,6 +79,21 @@ class SolveConfig:
     build_block_cols: int = 4096   # cols per reference/fused tile
     build_chunk: int = 128         # kd-cell width (two-stage/sharded gate)
 
+    # dense_topk sweep execution (repro.solver.topk_sharded). "single"
+    # runs the whole Jacobi loop on one device; "sharded" row-shards the
+    # (N, k+1) message layout over the 1-D workers mesh and runs the loop
+    # under shard_map — per-device state AND per-sweep FLOPs drop by the
+    # worker count, the piece that makes million-point solves fit.
+    # "auto" picks sharded on multi-device hosts once N >= SHARDED_SWEEP_N.
+    sweep: str = "auto"            # auto|single|sharded
+    # column-statistics exchange for the sharded sweep: "allgather"
+    # reproduces the single-device scatter order bit-for-bit (O(N*k)
+    # gathered per level); "psum" all-reduces O(N) per-shard partial
+    # column sums — the scalable mode, exact exemplar sets but
+    # float-associativity ulps vs the oracle. "auto" = allgather until
+    # the edge list outgrows ALLGATHER_MAX_ELEMS, then psum.
+    exchange: str = "auto"         # auto|allgather|psum
+
     # distributed backends (mr1d_*, mr2d)
     mesh: Optional[Any] = None          # jax Mesh; auto-built when None
     pad_to: Optional[int] = None        # force-pad N to a multiple (tests)

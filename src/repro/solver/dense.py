@@ -81,7 +81,8 @@ def _assignments(state: hap.HAPState) -> jnp.ndarray:
 
 
 def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
-                 max_iterations: int, stop: str, patience: int):
+                 max_iterations: int, stop: str, patience: int,
+                 count_mask=None, axis_name: str | None = None):
     """The one stopping-rule loop every single-device backend shares.
 
     ``sweep(state, it) -> state`` and ``assign(state) -> (L, N) int32``
@@ -92,16 +93,35 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
     ``(state, exemplars, n_sweeps, converged, trace)``; ``trace`` has
     length ``max_iterations`` with -1 past ``n_sweeps`` (the while_loop
     never wrote them).
+
+    Sharded callers (``repro.solver.topk_sharded``) run this loop *inside*
+    ``shard_map`` with ``n`` = their local row count: ``axis_name`` names
+    the mesh axis to all-reduce the assignment-change counter over, so
+    every worker sees the same global count and the while_loop exits in
+    lockstep on the same sweep as the single-device run; ``count_mask``
+    ((n,) bool) drops padding rows from the count, keeping the trace
+    bit-identical to the unpadded oracle's.
     """
     e0 = jnp.full((levels, n), -1, jnp.int32)
+    if axis_name is not None:
+        from repro.sharding.compat import pvary
+        e0 = pvary(e0, (axis_name,))    # match assign()'s device-varying type
+
+    def count_changes(e, e_prev):
+        diff = e != e_prev
+        if count_mask is not None:
+            diff = diff & count_mask[None, :]
+        changed = jnp.sum(diff.astype(jnp.int32))
+        if axis_name is not None:
+            changed = jax.lax.psum(changed, axis_name)
+        return changed
 
     if stop == "fixed":
         def step(carry, it):
             state, e_prev = carry
             state = sweep(state, it)
             e = assign(state)
-            changed = jnp.sum((e != e_prev).astype(jnp.int32))
-            return (state, e), changed
+            return (state, e), count_changes(e, e_prev)
 
         (state, e), trace = jax.lax.scan(
             step, (init, e0), jnp.arange(max_iterations))
@@ -119,7 +139,7 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
         state, e_prev, stable, it, trace = carry
         state = sweep(state, it)
         e = assign(state)
-        changed = jnp.sum((e != e_prev).astype(jnp.int32))
+        changed = count_changes(e, e_prev)
         stable = jnp.where(changed == 0, stable + 1, jnp.int32(0))
         trace = trace.at[it].set(changed)
         return (state, e, stable, it + 1, trace)

@@ -67,6 +67,15 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
             "SolveConfig.build_block_rows/build_block_cols/build_chunk "
             f"must be >= 1 (got {cfg.build_block_rows}/"
             f"{cfg.build_block_cols}/{cfg.build_chunk})")
+    from repro.solver.topk_sharded import EXCHANGE_MODES, SWEEP_MODES
+    if cfg.sweep not in SWEEP_MODES:
+        raise ValueError(
+            f"SolveConfig.sweep must be one of {SWEEP_MODES}; "
+            f"got {cfg.sweep!r}")
+    if cfg.exchange not in EXCHANGE_MODES:
+        raise ValueError(
+            f"SolveConfig.exchange must be one of {EXCHANGE_MODES}; "
+            f"got {cfg.exchange!r}")
 
 
 # ------------------------------------------------------------------ input
@@ -121,11 +130,16 @@ def _prepare_mesh(kind, cfg: SolveConfig):
     """-> (mesh, pad multiple) for distributed execution.
 
     ``kind`` is ``"1d"`` / ``"2d"`` or a BackendSpec carrying
-    ``mesh_kind`` — the sharded top-k build driver passes the string
-    directly (it shards rows over a 1-D worker mesh without being a
-    registered mesh backend itself)."""
+    ``mesh_kind`` — the sharded top-k build and sweep drivers pass the
+    string directly (they shard rows over a 1-D worker mesh without
+    being registered mesh backends themselves)."""
     from repro.launch.mesh import make_worker_mesh
-    from repro.sharding.compat import make_mesh
+    from repro.sharding.compat import make_mesh, maybe_init_distributed
+
+    # multi-process launches (env-var-described) must join the cluster
+    # before the first mesh is built so jax.devices() spans every host;
+    # single-process runs this is a strict no-op
+    maybe_init_distributed()
 
     if not isinstance(kind, str):
         kind = kind.mesh_kind

@@ -40,7 +40,12 @@ BUILD_BACKENDS = ("auto", "reference", "twostage", "fused", "sharded")
 
 #: N below which the reference scan is already fast enough that the
 #: two-stage machinery (kd ordering, chunk bounds) is pure overhead.
-TWOSTAGE_N = 16384
+#: Measured crossover (CPU, k = 64): even on well-clustered data — the
+#: cell-pruning gate's best case — twostage loses up to 16384 and first
+#: wins (~1.5x) at 32768; unclusterable data never recovers the gate
+#: cost, which auto-select cannot see, so the threshold sits at the
+#: clusterable crossover rather than below it.
+TWOSTAGE_N = 32768
 
 #: N at which a multi-device host switches to the sharded driver.
 SHARDED_N = 8192
@@ -112,6 +117,11 @@ def sharded_topk_similarity(
     (and, for a two-stage inner build, the host-computed kd permutation)
     is replicated, so each worker's output block is exactly its rows'
     edge lists. Bit-identical to the single-device builds.
+
+    On a one-device mesh this degenerates to the inner build plus pure
+    overhead (shard_map dispatch, the replicated column copy — measured
+    6x slower at N = 2048), so it short-circuits straight to the inner
+    build there; the output is bit-identical either way.
     """
     if mesh is None:
         from repro.solver.engine import _prepare_mesh
@@ -124,6 +134,8 @@ def sharded_topk_similarity(
         platform=jax.default_backend())
     if inner == "fused":                     # jnp builds per worker
         inner = "reference"
+    if w == 1:
+        return _local_build(x, k, cfg, inner)
 
     pad = (-n) % w
     xp = jnp.pad(jnp.asarray(x, jnp.float32), ((0, pad), (0, 0)))

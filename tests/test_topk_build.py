@@ -184,6 +184,9 @@ def test_auto_resolution_rules():
                                    "fused", "sharded"}
     r = lambda **kw: resolve_build_backend("auto", **kw)
     assert r(n=1000, k=32, n_devices=1, platform="cpu") == "reference"
+    # below the measured clusterable crossover the gate machinery is pure
+    # overhead — twostage must not be auto-picked there
+    assert r(n=16384, k=32, n_devices=1, platform="cpu") == "reference"
     assert r(n=50_000, k=32, n_devices=1, platform="cpu") == "twostage"
     # no pruning headroom between k and N -> reference
     assert r(n=50_000, k=20_000, n_devices=1, platform="cpu") == "reference"
