@@ -15,6 +15,24 @@ import subprocess
 import time
 
 
+def peak_rss_mb() -> float:
+    """Peak resident set size of this process tree, in MB.
+
+    ``ru_maxrss`` of the process itself plus the max over its reaped
+    children (bench workers fork subprocesses for forced device counts
+    and big-N solves — their peak is usually *the* peak). Linux reports
+    KB, macOS bytes; 0.0 where ``resource`` is unavailable.
+    """
+    try:
+        import resource
+        rss = max(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+                  resource.getrusage(resource.RUSAGE_CHILDREN).ru_maxrss)
+        scale = 1024.0 if platform.system() == "Darwin" else 1.0
+        return round(rss * scale / 1024.0, 2)
+    except Exception:
+        return 0.0
+
+
 def _git_sha() -> str:
     """Commit the record was produced from: CI env first (no subprocess
     on runners), then git; "unknown" when neither is available."""
@@ -36,7 +54,9 @@ def emit(name: str, rows: list, meta: dict | None = None,
     """Write BENCH_<name>.json: {"bench", "rows", "meta"}; returns path.
 
     Every record is stamped with the git SHA and jax version so the
-    nightly bench trajectory is attributable to a commit + toolchain.
+    nightly bench trajectory is attributable to a commit + toolchain,
+    and with the process tree's peak RSS so memory-wall claims are
+    measured, not inferred.
     """
     try:
         import jax
@@ -62,6 +82,7 @@ def emit(name: str, rows: list, meta: dict | None = None,
             # device kind makes rows comparable across runners; sharded
             # rows additionally carry the mesh shape they ran on
             "device_kind": device_kind,
+            "peak_rss_mb": peak_rss_mb(),
             **(meta or {}),
         },
     }

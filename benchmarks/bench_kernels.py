@@ -12,6 +12,10 @@ column measures interpret-mode overhead; on TPU it is the headline number.
 
     PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke] [--json P]
 
+An end-to-end ``coarsen`` solve row rides both tiers so the two-level
+partition -> local solves -> global stage pipeline's steady-state wall
+clock is gated on PRs like any kernel.
+
 ``--smoke`` shrinks sizes/reps so CI can run the whole file in seconds
 and still catch compile regressions in every kernel. Every run also
 writes a machine-readable ``BENCH_kernels.json`` (``--json`` overrides
@@ -146,6 +150,33 @@ def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
     return rows
 
 
+def run_coarsen_solve(n: int, reps: int) -> list:
+    """End-to-end two-level ``coarsen`` solve row: kd partition ->
+    batched local dense solves -> global exemplar stage -> broadcast
+    assignment. Timed after a warmup call so the AOT local-solver
+    compile (cached across calls) is excluded — the row gates the
+    steady-state pipeline, not the compiler."""
+    from repro.data import gaussian_blobs
+    from repro.solver import solve
+
+    part, iters = 128, 10
+    x, _ = gaussian_blobs(n=n, k=8, seed=0, spread=0.4)
+    kw = dict(backend="coarsen", partition_size=part, levels=2,
+              max_iterations=iters, damping=0.7, preference="median")
+    solve(x, **kw)                              # warmup + compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        solve(x, **kw)
+        best = min(best, time.time() - t0)
+    cells = max(n // part, 1)
+    return [{"name": f"coarsen_solve_n{n}_p{part}", "us": best * 1e6,
+             # local stage dominates: 2 kernels x 4 flops/entry per sweep
+             # over every cell's part^2 block (global stage is O(E^2))
+             "flops": 2 * 4 * iters * cells * part * part,
+             "bytes": 3 * part * part * 8 * 4}]
+
+
 def run_topk_build(tier: str) -> list:
     """Top-k similarity build tier: the perf target of the fused/sharded
     build PR. Times each build backend on the same blob suite so the
@@ -231,8 +262,10 @@ def main(argv=None):
         # flap 2-3x run-to-run on shared runners, which would flake the
         # regression gate (it only arms on rows above its --min-us floor)
         rows = run(n=256, reps=3, sweep_n=192, sweep_iters=2)
+        rows += run_coarsen_solve(n=1024, reps=3)
     else:
         rows = run()
+        rows += run_coarsen_solve(n=4096, reps=3)
     build_tier = args.topk_build_tier or "smoke"
     build_rows = [] if build_tier == "skip" else run_topk_build(build_tier)
     if build_tier == "smoke":

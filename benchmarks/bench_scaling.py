@@ -34,6 +34,16 @@ O(N)), which is what raises the memory-bound max-N by ~W at fixed
 per-device budget — plus the measured fact that the sharded program
 *runs* the same N bit-exactly (nightly parity check).
 
+``coarsen`` — the two-level backend vs the flat ``dense_topk`` path,
+end-to-end wall clock on the same blob suite (emitted separately into
+``BENCH_coarsen.json``). dense_topk rows past ``topk_cap`` are recorded
+as skipped — the O(N)-column build and O(L*N*k) message state are
+exactly the walls the coarsen decomposition sidesteps. Each ok row
+carries L0 purity against the generating labels so the
+decomposition-quality trajectory is recorded next to the speed
+trajectory (``benchmarks/records/coarsen_full.json`` holds the
+paper-scale N = 1e6 / 1e7 run).
+
     PYTHONPATH=src python benchmarks/bench_scaling.py [--tier smoke|full]
 """
 from __future__ import annotations
@@ -47,9 +57,9 @@ import time
 from repro.core.mrhap import comm_bytes_per_iteration
 
 try:
-    from benchmarks._emit import emit
+    from benchmarks._emit import emit, peak_rss_mb
 except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
-    from _emit import emit
+    from _emit import emit, peak_rss_mb
 
 WORKER = os.path.join(os.path.dirname(__file__), "_scaling_worker.py")
 SWEEP_WORKER = os.path.join(os.path.dirname(__file__),
@@ -153,6 +163,60 @@ def run_sweep_scaling(sizes=(65536, 262144, 1_000_000), k: int = 16,
     return rows
 
 
+def run_coarsen_scaling(sizes=(200_000, 1_000_000), topk_cap=1_000_000,
+                        k: int = 32, levels: int = 2,
+                        iterations: int = 30,
+                        partition_size: int = 256) -> list:
+    """coarsen vs dense_topk end-to-end N sweep (the ``coarsen`` suite).
+
+    Both backends solve the same blobs with the same sweep budget; rows
+    record wall clock, L0 cluster count, L0 purity against the
+    generating labels, the analytic message-state column, and the
+    process peak RSS after the solve. ``ru_maxrss`` is monotone over
+    the process lifetime, so the memory-wall evidence is each
+    backend's FIRST row at a given N (coarsen runs before dense_topk
+    at each size for exactly this reason).
+    """
+    from repro.core.metrics import purity
+    from repro.data import gaussian_blobs
+    from repro.solver import solve
+    from repro.solver.config import SolveConfig
+
+    batch = SolveConfig().coarsen_batch
+    rows = []
+    for n in sizes:
+        x, y = gaussian_blobs(n=n, k=16, seed=0, spread=0.5)
+        for backend in ("coarsen", "dense_topk"):
+            base = {"suite": "coarsen", "backend": backend, "n": n,
+                    "levels": levels, "iterations": iterations}
+            if backend == "coarsen":
+                base["partition_size"] = partition_size
+                # local stage state; the global stage adds O(E * k)
+                base["state_bytes"] = (3 * levels * partition_size
+                                       * partition_size * batch * 4)
+                kw = {"partition_size": partition_size}
+            else:
+                base["k"] = k
+                base["state_bytes"] = 3 * levels * n * (k + 1) * 4
+                if n > topk_cap:
+                    rows.append({**base, "status": "skipped",
+                                 "reason": "O(N)-column build + O(L*N*k) "
+                                           "state past the flat-backend "
+                                           "budget"})
+                    continue
+                kw = {"k": k}
+            t0 = time.time()
+            res = solve(x, backend=backend, levels=levels,
+                        max_iterations=iterations, damping=0.7,
+                        preference="median", **kw)
+            rows.append({**base, "status": "ok",
+                         "wall_s": time.time() - t0,
+                         "n_clusters_l0": int(res.n_clusters[0]),
+                         "purity_l0": float(purity(res.labels[0], y)),
+                         "peak_rss_mb": peak_rss_mb()})
+    return rows
+
+
 def main(argv=None):
     import argparse
     ap = argparse.ArgumentParser()
@@ -166,10 +230,13 @@ def main(argv=None):
                                      iterations=10, dense_cap=2048)
         sweep_rows = run_sweep_scaling(sizes=(4096, 16384), k=16,
                                        iterations=5, sharded_workers=2)
+        coarsen_rows = run_coarsen_scaling(sizes=(20_000,), topk_cap=20_000,
+                                           iterations=15)
     else:
         mr_rows = run()
         topk_rows = run_topk_scaling()
         sweep_rows = run_sweep_scaling()
+        coarsen_rows = run_coarsen_scaling()
     for r in mr_rows:
         r["suite"] = "mrhap"
         print(f"mrhap_scaling_{r['mode']}_w{r['workers']},"
@@ -189,8 +256,18 @@ def main(argv=None):
               f"{r['us_per_sweep']:.0f},"
               f"state/dev={r['state_bytes_per_device']}B "
               f"comm={r['comm_bytes_sweep']}B exch={r['exchange']}")
+    for r in coarsen_rows:
+        if r["status"] == "ok":
+            print(f"coarsen_{r['backend']}_n{r['n']},"
+                  f"{r['wall_s'] * 1e6:.0f},"
+                  f"purity_l0={r['purity_l0']:.3f} "
+                  f"rss={r['peak_rss_mb']:.0f}MB")
+        else:
+            print(f"coarsen_{r['backend']}_n{r['n']},skipped,"
+                  f"state={r['state_bytes']}B ({r['reason']})")
     rows = mr_rows + topk_rows + sweep_rows
     emit("scaling", rows, meta={"tier": args.tier})
+    emit("coarsen", coarsen_rows, meta={"tier": args.tier})
     return rows
 
 

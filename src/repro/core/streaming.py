@@ -25,7 +25,7 @@ exemplar assignments stable for ``patience`` sweeps.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,29 +48,47 @@ class StreamingResult(NamedTuple):
 
 def assign_nearest_exemplar(
     x: np.ndarray, exemplar_points: np.ndarray, *, chunk: int = 4096,
+    col_chunk: Optional[int] = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Second-pass assignment: each point to its nearest exemplar.
 
     The matmul identity ``||c - e||^2 = ||c||^2 + ||e||^2 - 2 c.e`` keeps
-    peak state at O(chunk * K) — no (N, K, d) broadcast. Returns
-    ``(labels, best_sim)``: ``labels[i]`` indexes ``exemplar_points`` and
-    ``best_sim[i] = -min_e ||x_i - e||^2`` is the winning (negative
-    squared Euclidean) similarity, the quantity drift detection compares
-    against the preference. Shared by ``streaming_hap``'s global
-    reassignment pass and the serve-path incremental assignment
-    (``repro.serve.cluster.incremental``).
+    peak state at O(chunk * col_chunk) — no (N, K, d) broadcast, and with
+    ``col_chunk`` set, never a full (chunk, K) block either (the coarsen
+    backend's broadcast-assign runs this at N = 1e7 against ~1e5
+    exemplars). Column blocks merge with a strict ``<`` so the first
+    minimum wins — ``np.argmin`` tie semantics, making the chunked path
+    bit-identical to the unchunked one. Returns ``(labels, best_sim)``:
+    ``labels[i]`` indexes ``exemplar_points`` and ``best_sim[i] =
+    -min_e ||x_i - e||^2`` is the winning (negative squared Euclidean)
+    similarity, the quantity drift detection compares against the
+    preference. Shared by ``streaming_hap``'s global reassignment pass,
+    the serve-path incremental assignment
+    (``repro.serve.cluster.incremental``), and the ``coarsen`` backend's
+    final broadcast-assign.
     """
     x = np.asarray(x, np.float32)
     ex_pts = np.asarray(exemplar_points, np.float32)
-    n = len(x)
-    ex_sq = (ex_pts ** 2).sum(1)[None, :]
+    n, n_ex = len(x), len(ex_pts)
+    cb = n_ex if col_chunk is None else max(int(col_chunk), 1)
+    ex_sq = (ex_pts ** 2).sum(1)
     labels = np.empty(n, np.int32)
     best = np.empty(n, np.float32)
     for lo in range(0, n, chunk):
         blk = x[lo:lo + chunk]
-        d2 = ((blk ** 2).sum(1)[:, None] + ex_sq - 2.0 * blk @ ex_pts.T)
-        labels[lo:lo + chunk] = np.argmin(d2, axis=1)
-        best[lo:lo + chunk] = -np.maximum(d2.min(axis=1), 0.0)
+        blk_sq = (blk ** 2).sum(1)[:, None]
+        best_d2 = np.full((len(blk),), np.inf, np.float32)
+        best_lab = np.zeros((len(blk),), np.int32)
+        for clo in range(0, n_ex, cb):
+            e_blk = ex_pts[clo:clo + cb]
+            d2 = blk_sq + ex_sq[None, clo:clo + cb] - 2.0 * blk @ e_blk.T
+            arg = np.argmin(d2, axis=1)
+            val = np.take_along_axis(d2, arg[:, None], axis=1)[:, 0]
+            upd = val < best_d2          # strict: earlier block keeps ties
+            best_lab[upd] = (arg + clo)[upd].astype(np.int32)
+            best_d2[upd] = val[upd]
+        labels[lo:lo + chunk] = best_lab
+        best[lo:lo + chunk] = -np.maximum(best_d2, 0.0)
     return labels, best
 
 

@@ -196,28 +196,14 @@ def topk_similarity(
 # ------------------------------------------------------- two-stage build
 def kd_order(x: np.ndarray, leaf: int) -> np.ndarray:
     """Recursive median-cut ordering: consecutive runs of ``leaf`` points
-    form tight axis-aligned cells. Host-side numpy on purpose — any
-    permutation is correctness-neutral (the build's output is exact for
-    every ordering); only the pruning power of the chunk bounds depends
-    on it, and median cuts beat anything expressible cheaply in-graph."""
-    x = np.asarray(x, np.float32)
-    n = x.shape[0]
-    perm = np.arange(n, dtype=np.int64)
-    stack = [(0, n)]
-    out = []
-    while stack:
-        lo, hi = stack.pop()
-        if hi - lo <= leaf:
-            out.append(perm[lo:hi])
-            continue
-        pts = x[perm[lo:hi]]
-        dim = int(np.argmax(pts.max(axis=0) - pts.min(axis=0)))
-        mid = (hi - lo) // 2
-        part = np.argpartition(pts[:, dim], mid)
-        perm[lo:hi] = perm[lo:hi][part]
-        stack.append((lo + mid, hi))
-        stack.append((lo, lo + mid))
-    return np.concatenate(out).astype(np.int32)
+    form tight axis-aligned cells. Any permutation is correctness-neutral
+    (the build's output is exact for every ordering); only the pruning
+    power of the chunk bounds depends on it. The partitioner itself lives
+    in ``repro.sharding.partitioning`` (the ``coarsen`` backend consumes
+    the same cells as its local-solve partitions); this wrapper keeps the
+    build's historical entry point."""
+    from repro.sharding.partitioning import kd_median_cut
+    return kd_median_cut(x, leaf)[0]
 
 
 def _geometry(x, metric: str):

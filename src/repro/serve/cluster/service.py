@@ -19,7 +19,10 @@ service:
 * big-N overflow routing: a request larger than every bucket the service
   will compile (``max_bucket_n``) runs as one direct ``dense_topk``
   solve with a capped neighbor count (``overflow_k``) — served, not
-  rejected, and without growing the compile cache.
+  rejected, and without growing the compile cache; past the dense_topk
+  comfort ceiling (``overflow_coarsen_n``) it escapes further to the
+  two-level ``coarsen`` backend, whose peak state no longer scales
+  quadratically (or even O(n*k)) with the request.
 
 Pumping is explicit or threaded: call ``drain()`` to process the queue on
 the caller's thread (deterministic — what the tests and benchmarks use),
@@ -84,7 +87,9 @@ class ServiceStats:
     micro_batches: int = 0
     batched_requests: int = 0          # full solves that shared a batch
     resolves_triggered: int = 0
-    overflow_solves: int = 0           # big-N requests routed to dense_topk
+    overflow_solves: int = 0           # big-N requests routed around buckets
+    overflow_coarsen_solves: int = 0   # of those, past the dense_topk
+                                       # ceiling -> coarsen backend
     cache: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> dict:
@@ -101,7 +106,8 @@ class ClusterService:
                  drift_halflife: int = 256,
                  stream_max_points: int = 100_000,
                  max_bucket_n: int = 4096, overflow: str = "route",
-                 overflow_k: int = 64):
+                 overflow_k: int = 64,
+                 overflow_coarsen_n: Optional[int] = 200_000):
         cfg = config or SolveConfig(stop="converged", max_iterations=100)
         # fail at construction, not mid-traffic: the batched dense path
         # ignores sparse-topk k, so a config carrying it is a mistake
@@ -127,6 +133,12 @@ class ClusterService:
         self.max_bucket_n = int(max_bucket_n)
         self.overflow = overflow
         self.overflow_k = int(overflow_k)
+        # past the dense_topk comfort ceiling even the O(n*k) edge list
+        # and its n-column build strain one request's latency/memory
+        # budget; such requests escape to the two-level coarsen backend
+        # (None disables the escape hatch)
+        self.overflow_coarsen_n = (None if overflow_coarsen_n is None
+                                   else int(overflow_coarsen_n))
         self._overflow_queue: "deque[_Pending]" = deque()
         self._overflow_turn = True
         self._drift_threshold = drift_threshold
@@ -453,14 +465,25 @@ class ClusterService:
 
     def _run_overflow(self, req: _Pending) -> None:
         """Big-N request -> one dense_topk solve with a capped neighbor
-        count; same response/stream contract as the batched path."""
+        count; past ``overflow_coarsen_n`` (and with a partition-
+        compatible preference), one two-level coarsen solve instead —
+        same response/stream contract as the batched path either way."""
         from repro.solver import solve
+        from repro.solver.coarsen import coarsen_pref_ok
 
         t0 = time.perf_counter()
+        use_coarsen = (self.overflow_coarsen_n is not None
+                       and req.n > self.overflow_coarsen_n
+                       and coarsen_pref_ok(self.config.preference))
         try:
-            cfg = self.config.replace(
-                backend="dense_topk", k=min(self.overflow_k, req.n - 1),
-                input_kind="points")
+            if use_coarsen:
+                cfg = self.config.replace(
+                    backend="coarsen", input_kind="points")
+            else:
+                cfg = self.config.replace(
+                    backend="dense_topk",
+                    k=min(self.overflow_k, req.n - 1),
+                    input_kind="points")
             result = solve(req.points, cfg)
         except Exception as exc:
             if req.internal and req.stream is not None:
@@ -475,6 +498,8 @@ class ClusterService:
         dt = (time.perf_counter() - t0) * 1e3
         with self._lock:
             self.stats.overflow_solves += 1
+            if use_coarsen:
+                self.stats.overflow_coarsen_solves += 1
             self.stats.full_solves += 1
         gen = None
         if req.stream is not None:

@@ -19,6 +19,8 @@ mr1d_transpose     paper-faithful shuffles (distributed transposes),
                    O(L*N^2/W) communication
 mr2d               2-D tile decomposition (lifts the M <= L*N ceiling)
 sharded_streaming  two-tier shard-local AP, O((N/S)^2) peak state
+coarsen            kd-partition -> batched local dense solves -> global
+                   exemplar solve; the N=1e7-on-one-host route
 """
 from __future__ import annotations
 
@@ -170,3 +172,16 @@ def _streaming_run(x, cfg: SolveConfig) -> RawBackendResult:
 register_backend(BackendSpec(
     name="sharded_streaming", run=_streaming_run, needs_points=True,
     doc="two-tier shard-local AP; O((N/S)^2) state, single output level"))
+
+
+# ------------------------------------------------------------- coarsen
+def _coarsen_run(x, cfg: SolveConfig) -> RawBackendResult:
+    from repro.solver.coarsen import run_coarsen
+    return run_coarsen(x, cfg)
+
+
+register_backend(BackendSpec(
+    name="coarsen", run=_coarsen_run, needs_points=True,
+    supports_early_stop=True,
+    doc="two-level kd-partition -> batched local dense solves -> global "
+        "exemplar solve; O(partition_size^2 * batch) peak state"))

@@ -1,0 +1,267 @@
+"""``coarsen`` backend: two-level partition -> local -> global solve.
+
+The route past even O(N*k) state (ROADMAP): every other big-N path
+still carries per-point message tensors and an O(N)-column similarity
+build, which caps a single host near N = 1e6. This backend composes the
+paper's tiered aggregation the way Xia et al. (local/global AP) and
+Ene et al. (MapReduce partition-then-merge) do:
+
+1. **partition** — the kd median-cut cells the twostage build already
+   orders by (``repro.sharding.partitioning.kd_cells``): at most
+   ``cfg.partition_size`` spatially-tight points per cell;
+2. **local solves** — per-cell dense AP, batched ``cfg.coarsen_batch``
+   cells at a time through the serve path's AOT-compiled
+   ``BatchedDenseSolver`` (one bucket shape, compiled once per config,
+   cached at module level — compile-free in steady state);
+3. **global solve** — ``solve()`` over the union of local exemplars
+   (``dense_parallel`` while E <= ``cfg.coarsen_global_dense_n``, else
+   ``dense_topk`` with k = min(``cfg.coarsen_global_k``, E-1)), with
+   preferences re-derived from partition masses: heavier local
+   exemplars get preferences closer to zero, so a center that speaks
+   for many points is harder to demote than a stray singleton;
+4. **broadcast-assign** — every point to its nearest global exemplar
+   via the row+column-chunked ``assign_nearest_exemplar`` identity
+   shared with ``sharded_streaming`` and the serve fast path.
+
+Peak state is O(partition_size^2 * coarsen_batch) + O(E * k) — at the
+defaults an N = 1e7 solve holds ~MBs of local state and an E ~ N/20
+global problem, where dense_topk alone would need the full (N, k)
+edge list plus an N-column build.
+
+The two levels map one-to-one onto HAP's hierarchy: the global solve
+runs with ``cfg.levels`` levels over the exemplar union, and each
+point inherits the full exemplar chain of its nearest global exemplar
+(level 0 = its global exemplar, level l = that exemplar's level-l
+exemplar). With a single partition (N <= partition_size) the local
+solve *is* the dense oracle — same batched kernel the serve path
+proves bit-parity for — and the global stage is skipped entirely.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.assignments import canonicalize_levels
+from repro.core.streaming import assign_nearest_exemplar
+from repro.solver.compiled import BatchedDenseSolver, config_static_key, \
+    slice_request
+from repro.solver.config import SolveConfig
+from repro.solver.result import RawBackendResult
+
+#: strategies the batched local solves (and the mass-rescaled global
+#: preference derivation) support; "random" needs a host-side draw and
+#: per-point arrays are global quantities — neither decomposes per cell.
+_PREF_STRATEGIES = ("median", "range_mid")
+
+#: target f32 elements per broadcast-assign row block — 32 MB blocks,
+#: so the (N, E) matrix is never held (satellite: N=1e7 x E~5e5 would
+#: be 20 TB dense).
+_ASSIGN_BLOCK_ELEMS = 8 << 20
+
+#: exemplar columns per assign block (bounds the f32 block width even
+#: when the adaptive row chunk is tiny).
+_ASSIGN_COL_CHUNK = 65536
+
+#: module-level compiled-handle cache, keyed on
+#: (batch, bucket_n, d, config_static_key) — repeated coarsen solves
+#: (the serve overflow path, benchmark sweeps) pay XLA compilation once.
+_HANDLES: dict = {}
+
+
+def coarsen_pref_ok(preference) -> bool:
+    """True iff ``preference`` decomposes over partitions: scalar or one
+    of the supported strategy strings."""
+    if preference is None:
+        return True
+    if isinstance(preference, str):
+        return preference in _PREF_STRATEGIES
+    return np.ndim(preference) == 0
+
+
+def check_coarsen_config(cfg: SolveConfig) -> None:
+    """Knob validation ``solve()`` runs at entry (engine.validate_config
+    delegates here) — fail at the front door, not partitions deep."""
+    if cfg.partition_size < 2:
+        raise ValueError(
+            f"SolveConfig.partition_size must be >= 2 "
+            f"(got {cfg.partition_size})")
+    if cfg.coarsen_batch < 1:
+        raise ValueError(
+            f"SolveConfig.coarsen_batch must be >= 1 "
+            f"(got {cfg.coarsen_batch})")
+    if cfg.coarsen_global_dense_n < 2 or cfg.coarsen_global_k < 1:
+        raise ValueError(
+            "SolveConfig.coarsen_global_dense_n must be >= 2 and "
+            f"coarsen_global_k >= 1 (got {cfg.coarsen_global_dense_n}/"
+            f"{cfg.coarsen_global_k})")
+    if not coarsen_pref_ok(cfg.preference):
+        raise ValueError(
+            "the coarsen backend's batched local solves support "
+            f"preference in {_PREF_STRATEGIES} or a scalar; got "
+            f"{cfg.preference!r} (draw 'random' host-side and pass the "
+            "scalar; per-point arrays don't decompose over partitions)")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 1).bit_length()
+
+
+def _local_handle(batch: int, n: int, d: int,
+                  cfg: SolveConfig) -> BatchedDenseSolver:
+    key = (batch, n, d, config_static_key(cfg))
+    h = _HANDLES.get(key)
+    if h is None:
+        h = _HANDLES[key] = BatchedDenseSolver(batch, n, d, cfg).compile()
+    return h
+
+
+def _global_preference(ex_pts: np.ndarray, masses: np.ndarray,
+                       cfg: SolveConfig):
+    """Preference for the global exemplar solve, re-derived from
+    partition masses.
+
+    The base value comes from the configured strategy evaluated over the
+    *exemplar* point set (exact dense statistic up to PREF_EXACT_N, the
+    deterministic dense-subsample estimate past it — the same branches
+    ``dense_topk`` itself uses). A negative base is then rescaled per
+    exemplar by ``mean_mass / mass_e``: an exemplar speaking for many
+    points gets a preference nearer zero (harder to demote) and a
+    singleton gets a more negative one — the standard weighted-AP move
+    for the merge stage of partition AP. A non-negative base is left
+    uniform (scaling flips its meaning).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.preferences import make_preferences
+    from repro.core.similarity import pairwise_similarity
+    from repro.solver.topk import PREF_EXACT_N, sampled_preferences
+
+    pref = cfg.preference
+    if pref is None:
+        return None
+    if isinstance(pref, str):
+        key = jax.random.PRNGKey(cfg.seed)
+        e = len(ex_pts)
+        if e <= PREF_EXACT_N:
+            s = pairwise_similarity(jnp.asarray(ex_pts), metric=cfg.metric)
+            base = float(np.asarray(make_preferences(s, pref, key=key))[0])
+        else:
+            base = float(np.asarray(sampled_preferences(
+                jnp.asarray(ex_pts), pref, cfg.metric, key))[0])
+    else:
+        base = float(pref)
+    if base >= 0.0:
+        return base
+    m = masses.astype(np.float64)
+    return (base * (m.mean() / m)).astype(np.float32)
+
+
+def _trivial(n: int, levels: int) -> RawBackendResult:
+    return RawBackendResult(
+        exemplars=np.zeros((levels, n), np.int32), n_sweeps=0,
+        converged=True, trace=None)
+
+
+def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
+    """(N, d) points -> RawBackendResult via the two-level decomposition.
+
+    Lazy imports of the engine keep the module cycle-free (the engine
+    imports the registry, which imports this backend's adapter)."""
+    from repro.sharding.partitioning import kd_cells
+    from repro.solver.engine import solve
+
+    check_coarsen_config(cfg)
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    if n < 2:
+        return _trivial(n, cfg.levels)
+
+    cells = kd_cells(x, cfg.partition_size)
+
+    # ---- single partition: the local solve IS the dense oracle (cell 0
+    # is the identity ordering; bucket n == n, so not even padding
+    # separates it from dense_parallel on the same points)
+    if len(cells) == 1:
+        local = cfg.replace(backend="dense_parallel", k=None,
+                            input_kind="points")
+        h = _local_handle(1, n, x.shape[1], local)
+        raw = h.run(x[None], np.asarray([n], np.int32))
+        rbr, _ = slice_request(raw, 0, n, cfg.stop)
+        return rbr
+
+    # ---- local solves: one output level per cell (the hierarchy is the
+    # global stage's job), batched through one compiled bucket shape
+    singles = [c for c in cells if len(c) == 1]
+    multi = [c for c in cells if len(c) > 1]
+    max_sz = max(len(c) for c in multi) if multi else 2
+    bucket_n = max(min(_next_pow2(max_sz), cfg.partition_size), max_sz, 2)
+    batch = max(min(cfg.coarsen_batch, len(multi)), 1)
+    local = cfg.replace(backend="dense_parallel", levels=1, k=None,
+                        input_kind="points")
+    h = _local_handle(batch, bucket_n, x.shape[1], local)
+
+    ex_idx: list[np.ndarray] = []      # global point index per exemplar
+    masses: list[np.ndarray] = []      # points each exemplar speaks for
+    local_sweeps, local_converged = 0, True
+    for lo in range(0, len(multi), batch):
+        group = multi[lo:lo + batch]
+        pts = np.zeros((batch, bucket_n, x.shape[1]), np.float32)
+        n_real = np.full((batch,), 2, np.int32)     # inert filler slots
+        for i, cell in enumerate(group):
+            pts[i, :len(cell)] = x[cell]
+            n_real[i] = len(cell)
+        raw = h.run(pts, n_real)
+        for i, cell in enumerate(group):
+            rbr, _ = slice_request(raw, i, len(cell), cfg.stop)
+            e0 = canonicalize_levels(np.asarray(rbr.exemplars))[0]
+            uniq, inv = np.unique(e0, return_inverse=True)
+            ex_idx.append(cell[uniq])
+            masses.append(np.bincount(inv).astype(np.int64))
+            local_sweeps = max(local_sweeps, rbr.n_sweeps)
+            if rbr.converged is False:
+                local_converged = False
+    for c in singles:                   # a lone point is its own exemplar
+        ex_idx.append(c)
+        masses.append(np.ones((1,), np.int64))
+
+    ex_idx = np.concatenate(ex_idx)
+    masses = np.concatenate(masses)
+    ex_pts = x[ex_idx]
+    n_ex = len(ex_idx)
+
+    if n_ex == 1:
+        e_out = np.broadcast_to(
+            np.int32(ex_idx[0]), (cfg.levels, n)).copy()
+        conv = local_converged if cfg.stop == "converged" else None
+        return RawBackendResult(exemplars=e_out, n_sweeps=local_sweeps,
+                                converged=conv, trace=None)
+
+    # ---- global solve over the exemplar union, mass-derived preferences
+    if n_ex <= cfg.coarsen_global_dense_n:
+        gcfg = cfg.replace(backend="dense_parallel", k=None)
+    else:
+        gcfg = cfg.replace(backend="dense_topk",
+                           k=min(cfg.coarsen_global_k, n_ex - 1))
+    gcfg = gcfg.replace(input_kind="points",
+                        preference=_global_preference(ex_pts, masses, cfg))
+    gres = solve(ex_pts, gcfg)
+
+    # ---- broadcast-assign: nearest global exemplar, row+column chunked
+    g_uniq = np.unique(gres.exemplars[0])
+    row_chunk = int(max(256, min(65536,
+                                 _ASSIGN_BLOCK_ELEMS // max(len(g_uniq), 1))))
+    labels, _ = assign_nearest_exemplar(
+        x, ex_pts[g_uniq], chunk=row_chunk, col_chunk=_ASSIGN_COL_CHUNK)
+
+    # level l exemplar of point i = its global exemplar's own level-l
+    # exemplar — the two coarsen tiers spliced into the HAP hierarchy
+    # (level 0 reduces to the global exemplar itself: canonicalized
+    # exemplars are self-exemplars).
+    e_out = ex_idx[gres.exemplars[:, g_uniq[labels]]].astype(np.int32)
+
+    n_sweeps = max(local_sweeps, gres.n_sweeps)
+    conv = None
+    if cfg.stop == "converged":
+        conv = bool(local_converged and bool(gres.converged))
+    return RawBackendResult(exemplars=e_out, n_sweeps=n_sweeps,
+                            converged=conv, trace=None)

@@ -21,6 +21,14 @@ STREAMING_THRESHOLD = 8192
 #: mr1d_stats backend over single-device dense sweeps.
 DISTRIBUTED_THRESHOLD = 64
 
+#: N at or above which auto-selection (points in hand, compatible
+#: preference strategy) routes to the two-level ``coarsen`` backend —
+#: past this size even the O(N*k) dense_topk state and its O(N)-columns
+#: build become the wall, while coarsen's peak state is
+#: O(partition_size^2 * batch) + O(E * k) for E ~ N/partition_size
+#: local exemplars.
+COARSEN_THRESHOLD = 500_000
+
 
 @dataclasses.dataclass(frozen=True)
 class SolveConfig:
@@ -100,6 +108,19 @@ class SolveConfig:
 
     # dense_fused
     block: int = 256
+
+    # coarsen (two-level partition -> local dense solves -> global
+    # exemplar solve). partition_size is the kd median-cut leaf: every
+    # local solve is at most this many points (peak local state is
+    # O(partition_size^2 * coarsen_batch)); coarsen_batch is how many
+    # partitions one AOT-compiled BatchedDenseSolver call solves at
+    # once; the global solve over the union of E local exemplars runs
+    # dense_parallel while E <= coarsen_global_dense_n, else dense_topk
+    # with k = min(coarsen_global_k, E - 1).
+    partition_size: int = 256
+    coarsen_batch: int = 8
+    coarsen_global_dense_n: int = 4096
+    coarsen_global_k: int = 64
 
     # sharded_streaming
     shard_size: int = 512

@@ -76,6 +76,9 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
         raise ValueError(
             f"SolveConfig.exchange must be one of {EXCHANGE_MODES}; "
             f"got {cfg.exchange!r}")
+    if cfg.backend == "coarsen":
+        from repro.solver.coarsen import check_coarsen_config
+        check_coarsen_config(cfg)
 
 
 # ------------------------------------------------------------------ input

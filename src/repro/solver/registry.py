@@ -11,7 +11,8 @@ import dataclasses
 from typing import Callable, Dict, Optional
 
 from repro.solver.config import (
-    DISTRIBUTED_THRESHOLD, STREAMING_THRESHOLD, SolveConfig,
+    COARSEN_THRESHOLD, DISTRIBUTED_THRESHOLD, STREAMING_THRESHOLD,
+    SolveConfig,
 )
 from repro.solver.result import RawBackendResult
 
@@ -69,21 +70,29 @@ def auto_select(n: int, levels: int, *, n_devices: int, has_points: bool,
     """Pick a backend from problem size and hardware (the local-vs-global
     regime split of Xia et al.):
 
-    1. N past the quadratic-state budget and raw points available:
+    1. N past even the O(N*k) sparse-state budget and raw points with a
+       partition-compatible preference: ``coarsen`` — two-level
+       partition -> local dense solves -> global exemplar solve, peak
+       state O(partition_size^2 * batch) + O(E * k);
+    2. N past the quadratic-state budget and raw points available:
        ``sharded_streaming`` when a single output level satisfies the
        request (it collapses the hierarchy), else ``dense_topk`` — the
        O(L*N*k)-state sparse backend keeps the full hierarchy *and* the
        convergence stopping rule at any N;
-    2. multiple devices and N big enough to shard -> ``mr1d_stats`` (the
+    3. multiple devices and N big enough to shard -> ``mr1d_stats`` (the
        O(L*N) communication mode);
-    3. single device: ``dense_fused`` on TPU (Pallas hot path), else
+    4. single device: ``dense_fused`` on TPU (Pallas hot path), else
        ``dense_parallel`` (XLA-fused Jacobi sweeps).
 
     ``stop="converged"`` restricts the choice to the dense family
-    (including ``dense_topk``) — the streaming and distributed backends
-    run fixed schedules and would reject it.
+    (``dense_topk`` and ``coarsen`` included) — the streaming and
+    distributed backends run fixed schedules and would reject it.
     """
     early = cfg.stop == "converged"
+    if has_points and n >= COARSEN_THRESHOLD:
+        from repro.solver.coarsen import coarsen_pref_ok
+        if coarsen_pref_ok(cfg.preference):
+            return "coarsen"
     if has_points and n >= STREAMING_THRESHOLD:
         if levels == 1 and not early:
             return "sharded_streaming"

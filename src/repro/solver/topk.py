@@ -152,8 +152,9 @@ def build_from_points(x: jnp.ndarray, k: int, levels: int, *,
     n = x.shape[0]
     cfg = (config or SolveConfig()).replace(metric=metric)
     vals, idx = build_topk_similarity(x, k, cfg)
-    if (preference in ("median", "range_mid") and n > PREF_EXACT_N
-            and k < n - 1):
+    if (isinstance(preference, str)
+            and preference in ("median", "range_mid")
+            and n > PREF_EXACT_N and k < n - 1):
         if key is None:
             key = jax.random.PRNGKey(0)
         # dedicated fold so the subsample draw is decoupled from any other

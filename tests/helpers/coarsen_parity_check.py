@@ -1,0 +1,71 @@
+"""Nightly helper: two-level ``coarsen`` backend parity — the ISSUE-7
+acceptance check, bigger and slower than the tier-1 unit tests.
+
+Two contracts, both checked against the flat oracles:
+
+* **single-partition reduction**: with ``partition_size >= N`` the
+  backend routes the whole input through one batched dense solve with
+  zero padding, so exemplars/labels/sweep counts must equal
+  ``dense_parallel`` EXACTLY — for fixed budgets and for the
+  converged stop. Any divergence at scale is then attributable to the
+  decomposition, never the solver.
+* **duplicate-heavy inputs**: exact duplicate points produce tied
+  messages in every local cell AND a global stage whose exemplar union
+  is wall-to-wall duplicates; the decomposition must still collapse to
+  exactly one cluster per distinct point, with every duplicate group
+  landing in one cluster.
+
+Exits nonzero on any mismatch.
+"""
+import sys
+
+import numpy as np
+
+from repro.data import gaussian_blobs
+from repro.solver import solve
+
+
+def check_single_partition_oracle() -> bool:
+    ok = True
+    for n, stop, iters in ((700, "fixed", 40), (700, "converged", 200)):
+        x, _ = gaussian_blobs(n=n, k=6, seed=0, spread=0.3, box=20.0)
+        ref = solve(x, backend="dense_parallel", levels=3, stop=stop,
+                    max_iterations=iters, damping=0.7)
+        res = solve(x, backend="coarsen", partition_size=1024, levels=3,
+                    stop=stop, max_iterations=iters, damping=0.7)
+        same = (np.array_equal(res.exemplars, ref.exemplars)
+                and np.array_equal(res.labels, ref.labels)
+                and res.n_sweeps == ref.n_sweeps
+                and res.converged == ref.converged)
+        print(f"[{stop}] single-partition n={n}: oracle_equal={same} "
+              f"(sweeps {res.n_sweeps} vs {ref.n_sweeps})")
+        ok &= same
+    return ok
+
+
+def check_duplicate_heavy() -> bool:
+    ok = True
+    rng = np.random.default_rng(7)
+    for n_distinct, copies, part in ((6, 500, 128), (3, 1000, 64)):
+        base = (rng.normal(size=(n_distinct, 4)) * 12.0).astype(np.float32)
+        x = np.repeat(base, copies, axis=0)
+        res = solve(x, backend="coarsen", partition_size=part,
+                    max_iterations=30, damping=0.7)
+        lab = res.labels[0].reshape(n_distinct, copies)
+        collapsed = (res.n_clusters[0] == n_distinct
+                     and all(len(np.unique(row)) == 1 for row in lab))
+        print(f"duplicates {n_distinct}x{copies} part={part}: "
+              f"collapsed={collapsed} "
+              f"(clusters {int(res.n_clusters[0])})")
+        ok &= collapsed
+    return ok
+
+
+def main() -> int:
+    ok = check_single_partition_oracle()
+    ok &= check_duplicate_heavy()
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -356,3 +356,40 @@ def test_threaded_scheduler_drains_queue():
     finally:
         svc.stop()
     assert svc.snapshot()["cache"]["misses"] == 1
+
+
+def test_overflow_past_ceiling_escapes_to_coarsen():
+    """An overflow request bigger than the dense_topk comfort ceiling
+    (overflow_coarsen_n) runs as one two-level coarsen solve — counted
+    separately, same response contract, still no compile-cache growth."""
+    svc = ClusterService(config=SolveConfig(max_iterations=30,
+                                            preference="median", levels=2),
+                         buckets=[(64, 2, 4)], auto_bucket=False,
+                         overflow_coarsen_n=300)
+    svc.warmup()
+    x, _ = _blobs(400, seed=13)
+    compiled_before = svc.snapshot()["compiled"]
+    res = svc.solve_sync(x)
+    assert res.path == "full" and res.bucket is None
+    assert res.solve.backend == "coarsen"
+    snap = svc.snapshot()
+    assert snap["overflow_solves"] == 1
+    assert snap["overflow_coarsen_solves"] == 1
+    assert snap["compiled"] == compiled_before
+    # below the ceiling the dense_topk route is untouched
+    res2 = svc.solve_sync(_blobs(200, seed=14)[0])
+    assert res2.solve.backend == "dense_topk"
+    snap = svc.snapshot()
+    assert snap["overflow_solves"] == 2
+    assert snap["overflow_coarsen_solves"] == 1
+
+
+def test_overflow_coarsen_disabled_with_none():
+    svc = ClusterService(config=SolveConfig(max_iterations=30,
+                                            preference="median", levels=2),
+                         buckets=[(64, 2, 4)], auto_bucket=False,
+                         overflow_coarsen_n=None)
+    svc.warmup()
+    res = svc.solve_sync(_blobs(400, seed=13)[0])
+    assert res.solve.backend == "dense_topk"
+    assert svc.snapshot()["overflow_coarsen_solves"] == 0

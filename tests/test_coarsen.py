@@ -1,0 +1,167 @@
+"""Two-level ``coarsen`` backend: partition -> local dense solves ->
+global exemplar solve -> broadcast assignment.
+
+The load-bearing contract is the single-partition reduction: with
+N <= partition_size the backend IS the dense oracle (same batched
+kernel, no padding), so every divergence at scale is attributable to
+the decomposition, not the solver.
+"""
+import numpy as np
+import pytest
+
+from repro.core.metrics import purity
+from repro.data import gaussian_blobs
+from repro.solver import SolveConfig, solve
+from repro.solver.config import COARSEN_THRESHOLD
+from repro.solver.registry import auto_select, get_backend
+
+
+def _blobs(n, seed=0, k=6, dim=8):
+    return gaussian_blobs(n=n, k=k, dim=dim, seed=seed, spread=0.3,
+                          box=20.0)
+
+
+# ------------------------------------------------- single-partition oracle
+def test_single_partition_is_exemplar_identical_to_dense_oracle():
+    x, _ = _blobs(300, seed=1)
+    ref = solve(x, backend="dense_parallel", max_iterations=40)
+    res = solve(x, backend="coarsen", partition_size=512,
+                max_iterations=40)
+    assert res.backend == "coarsen"
+    np.testing.assert_array_equal(res.exemplars, ref.exemplars)
+    np.testing.assert_array_equal(res.labels, ref.labels)
+    np.testing.assert_array_equal(res.n_clusters, ref.n_clusters)
+
+
+def test_single_partition_converged_matches_oracle():
+    x, _ = _blobs(300, seed=2)
+    ref = solve(x, backend="dense_parallel", stop="converged",
+                max_iterations=150)
+    res = solve(x, backend="coarsen", partition_size=512,
+                stop="converged", max_iterations=150)
+    assert res.converged and ref.converged
+    assert res.n_sweeps == ref.n_sweeps
+    np.testing.assert_array_equal(res.exemplars, ref.exemplars)
+
+
+# ------------------------------------------------------- multi-partition
+def test_multi_partition_recovers_blob_structure():
+    x, y = _blobs(600, seed=0)
+    res = solve(x, backend="coarsen", partition_size=128,
+                max_iterations=40)
+    # 8 cells of 75 points each -> a real two-level run
+    for l in range(res.levels):
+        assert purity(res.labels[l], y) > 0.85
+    # mass-scaled global preferences consolidate: near the true 6 blobs,
+    # far below the per-cell exemplar union
+    assert 2 <= res.n_clusters[0] <= 24
+
+
+def test_multi_partition_exemplars_are_canonical_and_consistent():
+    x, _ = _blobs(600, seed=3)
+    res = solve(x, backend="coarsen", partition_size=128,
+                max_iterations=40)
+    for l in range(res.levels):
+        e = res.exemplars[l]
+        # closure: an exemplar is its own exemplar
+        np.testing.assert_array_equal(e[e], e)
+        # labels are a dense relabeling of the exemplar assignment
+        uniq = np.unique(e)
+        assert res.n_clusters[l] == len(uniq)
+        np.testing.assert_array_equal(uniq[res.labels[l]], e)
+
+
+def test_multi_partition_converged_stop_reports():
+    x, _ = _blobs(600, seed=0)
+    res = solve(x, backend="coarsen", partition_size=128,
+                stop="converged", max_iterations=200)
+    assert res.converged is True
+    assert 0 < res.n_sweeps < 200
+
+
+def test_global_topk_stage_engages_past_dense_ceiling():
+    """Forcing coarsen_global_dense_n below E routes the global stage
+    through dense_topk with k = min(coarsen_global_k, E-1) — same
+    structure within the usual sparse tolerance."""
+    x, y = _blobs(600, seed=0)
+    res = solve(x, backend="coarsen", partition_size=128,
+                max_iterations=40, coarsen_global_dense_n=2,
+                coarsen_global_k=16)
+    assert purity(res.labels[0], y) > 0.8
+
+
+def test_duplicate_heavy_input_collapses_to_distinct_points():
+    rng = np.random.default_rng(0)
+    base = (rng.normal(size=(4, 5)) * 10.0).astype(np.float32)
+    x = np.repeat(base, 250, axis=0)
+    res = solve(x, backend="coarsen", partition_size=64,
+                max_iterations=30)
+    assert res.n_clusters[0] == 4
+    # every member of a duplicate group lands in one cluster
+    lab = res.labels[0].reshape(4, 250)
+    assert all(len(np.unique(row)) == 1 for row in lab)
+
+
+def test_size_one_cells_are_their_own_exemplars():
+    """partition_size=2 on odd N produces size-1 kd cells; the backend
+    must fold them in host-side (the batched solver floor is n=2)."""
+    x, _ = _blobs(9, seed=4, k=3, dim=2)
+    res = solve(x, backend="coarsen", partition_size=2,
+                max_iterations=30)
+    assert res.n == 9
+    for l in range(res.levels):
+        e = res.exemplars[l]
+        np.testing.assert_array_equal(e[e], e)
+
+
+def test_trivial_single_point():
+    res = solve(np.zeros((1, 3), np.float32), backend="coarsen",
+                input_kind="points")
+    np.testing.assert_array_equal(res.exemplars,
+                                  np.zeros((3, 1), np.int32))
+
+
+# --------------------------------------------------- validation + routing
+def test_rejects_bad_knobs_at_entry():
+    x = np.zeros((16, 2), np.float32)
+    with pytest.raises(ValueError, match="partition_size"):
+        solve(x, backend="coarsen", partition_size=1)
+    with pytest.raises(ValueError, match="coarsen_batch"):
+        solve(x, backend="coarsen", coarsen_batch=0)
+    with pytest.raises(ValueError, match="coarsen_global_dense_n"):
+        solve(x, backend="coarsen", coarsen_global_dense_n=1)
+
+
+def test_rejects_nondecomposable_preferences():
+    x = np.zeros((16, 2), np.float32)
+    with pytest.raises(ValueError, match="decompose|support"):
+        solve(x, backend="coarsen", preference="random")
+    with pytest.raises(ValueError, match="decompose|support"):
+        solve(x, backend="coarsen", preference=np.full((16,), -1.0))
+
+
+def test_auto_select_routes_big_point_sets_to_coarsen():
+    cfg = SolveConfig()
+    pick = auto_select(COARSEN_THRESHOLD, 3, n_devices=1,
+                       has_points=True, platform="cpu", cfg=cfg)
+    assert pick == "coarsen"
+    # arrays don't decompose over partitions -> falls through to topk
+    pick = auto_select(COARSEN_THRESHOLD, 3, n_devices=1, has_points=True,
+                       platform="cpu",
+                       cfg=cfg.replace(preference=np.zeros(4)))
+    assert pick == "dense_topk"
+    # similarity input (no points) can never coarsen
+    pick = auto_select(COARSEN_THRESHOLD, 3, n_devices=1,
+                       has_points=False, platform="cpu", cfg=cfg)
+    assert pick != "coarsen"
+
+
+def test_registered_spec_needs_points():
+    spec = get_backend("coarsen")
+    assert spec.needs_points and spec.supports_early_stop
+    x, _ = _blobs(64, seed=5)
+    from repro.core.similarity import pairwise_similarity
+    import jax.numpy as jnp
+    s = np.asarray(pairwise_similarity(jnp.asarray(x)))
+    with pytest.raises(ValueError, match="raw points"):
+        solve(s, backend="coarsen")

@@ -104,3 +104,34 @@ def test_converged_ap_respects_max_iterations():
     res = converged_ap(s, max_iterations=5, patience=100)
     assert not bool(res.converged)
     assert int(res.n_iterations) == 5
+
+
+# ------------------------------------------- chunked assignment bit-parity
+def test_assign_chunking_is_bit_identical():
+    """Row and column chunking are pure blocking: labels AND best
+    similarities must match the unchunked pass bit-for-bit (column
+    blocks merge first-min-wins, np.argmin's tie rule)."""
+    x, _ = gaussian_blobs(n=777, k=6, seed=11, spread=0.4, box=16.0)
+    ex = x[np.random.default_rng(0).choice(777, 61, replace=False)]
+    ref_l, ref_b = assign_nearest_exemplar(x, ex, chunk=777)
+    for chunk, col_chunk in [(64, None), (777, 7), (100, 13), (16, 4),
+                             (5, 3)]:
+        lab, best = assign_nearest_exemplar(x, ex, chunk=chunk,
+                                            col_chunk=col_chunk)
+        np.testing.assert_array_equal(lab, ref_l)
+        np.testing.assert_array_equal(best, ref_b)
+    # degenerate 1-wide blocks hit a different BLAS kernel (ulp-level
+    # matmul shifts); assignments must still agree exactly
+    lab, _ = assign_nearest_exemplar(x, ex, chunk=1, col_chunk=1)
+    np.testing.assert_array_equal(lab, ref_l)
+
+
+def test_assign_column_chunk_ties_resolve_to_first():
+    """Duplicate exemplars split across column blocks: the earlier
+    index must win, exactly like np.argmin over the full row."""
+    x = np.zeros((5, 3), np.float32)
+    ex = np.zeros((4, 3), np.float32)          # all ties at distance 0
+    for col_chunk in (None, 1, 2, 3):
+        lab, best = assign_nearest_exemplar(x, ex, col_chunk=col_chunk)
+        assert np.all(lab == 0)
+        assert np.all(best == 0.0)
