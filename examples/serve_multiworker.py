@@ -1,0 +1,88 @@
+"""Multi-worker SLO serving, end to end.
+
+Stands up a two-worker ``ClusterService`` with bounded queues, warms the
+batch-ladder executables, then walks through the dispatch layer's
+behaviours one at a time:
+
+1. plain requests under a deadline (served well inside the SLO);
+2. a deadline that is already hopeless (rejected at submit, in
+   microseconds, instead of wasting a queue slot);
+3. overload against the bounded queues (explicit sheds — the error
+   budget sees ``ServiceOverloadedError``, the served requests keep
+   their latency);
+4. work stealing (all work lands on one worker's shard; draining the
+   *other* worker serves it anyway);
+5. the stats snapshot an operator would scrape.
+
+Run:
+
+    PYTHONPATH=src python examples/serve_multiworker.py
+"""
+import numpy as np
+
+from repro.data.synth import gaussian_blobs
+from repro.serve.cluster import (
+    ClusterService, DeadlineExceededError, ServiceOverloadedError,
+)
+
+# --- a small two-worker service with bounded queues --------------------
+svc = ClusterService(
+    buckets=[(64, 2, 4), (128, 2, 4)],  # (n, d, micro-batch capacity)
+    auto_bucket=False,                  # fixed table: the SLO posture
+    workers=2,                          # queue shard + compile cache each
+    max_queue=8,                        # per worker; full everywhere=shed
+    max_wait_ms=25.0,                   # gather cap (deadlines can shrink)
+)
+delta = svc.warmup()                    # ALL compiles happen here
+print(f"warmup: {delta['misses']} executables compiled in "
+      f"{delta['compile_seconds']:.1f}s "
+      f"(2 buckets x batch ladder 1,2,4 x 2 workers)")
+
+points, _ = gaussian_blobs(n=100, k=4, dim=2, seed=0)
+points = np.asarray(points, np.float32)
+
+# --- 1. a request with an SLO ------------------------------------------
+svc.start()                             # one scheduler thread per worker
+fut = svc.submit(points, deadline_ms=500)
+resp = fut.result(timeout=30)
+print(f"served: path={resp.path} worker={resp.worker} "
+      f"bucket={resp.bucket} queue={resp.queue_ms:.1f}ms "
+      f"solve={resp.solve_ms:.1f}ms "
+      f"clusters={len(np.unique(resp.labels))}")
+
+# --- 2. a hopeless deadline is rejected at the door --------------------
+try:
+    svc.submit(points, deadline_ms=0).result()
+except DeadlineExceededError as exc:
+    print(f"hopeless deadline: rejected at submit ({exc})")
+
+# --- 3. overload: bounded queues shed instead of queueing forever ------
+futs = [svc.submit(points, deadline_ms=2000) for _ in range(40)]
+shed = sum(isinstance(f.exception(timeout=60), ServiceOverloadedError)
+           for f in futs)
+served = sum(f.exception(timeout=60) is None for f in futs)
+print(f"overload burst of 40: {served} served, {shed} shed "
+      f"(explicit rejections, not latency)")
+svc.stop()
+
+# --- 4. work stealing: one hot shard never strands a worker ------------
+hot = ClusterService(buckets=[(64, 2, 4)], auto_bucket=False, workers=2)
+hot.warmup()
+backlog = [hot.submit(points[:50]) for _ in range(6)]
+print(f"queue depths before: "
+      f"{[w.depth() for w in hot.workers]}")
+batches = hot.drain_worker(1)           # worker 1 drains, stealing from 0
+print(f"worker 1 drained {batches} batches "
+      f"(stolen: {hot.stats.stolen_batches}); "
+      f"all served: {all(f.exception() is None for f in backlog)}")
+
+# --- 5. what an operator scrapes ---------------------------------------
+snap = svc.snapshot()
+print("\nstats snapshot (atomic copy):")
+for key in ("requests", "full_solves", "micro_batches", "sheds",
+            "deadline_rejects", "deadline_drops", "stolen_batches"):
+    print(f"  {key:>18}: {snap[key]}")
+print(f"  {'cache':>18}: {snap['cache']}")
+for w in snap["workers"]:
+    print(f"  {'worker ' + str(w['worker']):>18}: "
+          f"{w['compiled']} executables, queued={w['queued']}")

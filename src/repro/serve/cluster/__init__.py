@@ -2,23 +2,35 @@
 
     from repro.serve.cluster import ClusterService
 
-    svc = ClusterService(buckets=[(128, 2), (512, 2)])
+    svc = ClusterService(buckets=[(128, 2), (512, 2)], workers=2)
     svc.warmup()                                   # all compiles happen here
-    fut = svc.submit(points, stream="sensors")     # Future[ClusterResponse]
-    svc.drain()                                    # or svc.start() a thread
+    fut = svc.submit(points, stream="sensors",     # Future[ClusterResponse]
+                     deadline_ms=500)
+    svc.drain()                                    # or svc.start() threads
     fut.result().labels
 
-See docs/serving.md for architecture, bucket tuning, and drift control.
+See docs/serving.md for architecture, dispatch/SLO tuning, and the ops
+runbook; docs/architecture.md places the serve path in the whole stack.
 """
-from repro.serve.cluster.buckets import Bucket, BucketRouter
+from repro.serve.cluster.buckets import (
+    Bucket, BucketRouter, batch_ladder, ladder_fit,
+)
 from repro.serve.cluster.compile_cache import CacheStats, CompileCache
+from repro.serve.cluster.dispatch import (
+    ClusterRequest, DeadlineExceededError, ServiceOverloadedError,
+    WorkerShard,
+)
 from repro.serve.cluster.incremental import AssignResult, StreamState
 from repro.serve.cluster.service import (
     ClusterResponse, ClusterService, ServiceStats,
 )
+from repro.serve.cluster.traffic import fit_buckets, mine_trace
 
 __all__ = [
-    "Bucket", "BucketRouter", "CacheStats", "CompileCache",
+    "Bucket", "BucketRouter", "batch_ladder", "ladder_fit",
+    "CacheStats", "CompileCache",
+    "ClusterRequest", "DeadlineExceededError", "ServiceOverloadedError",
+    "WorkerShard",
     "AssignResult", "StreamState", "ClusterResponse", "ClusterService",
-    "ServiceStats",
+    "ServiceStats", "fit_buckets", "mine_trace",
 ]

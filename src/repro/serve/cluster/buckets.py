@@ -41,6 +41,28 @@ def _next_pow2(v: int, floor: int = MIN_BUCKET_N) -> int:
     return 1 << (v - 1).bit_length()
 
 
+def batch_ladder(batch: int) -> tuple:
+    """Power-of-two rider-count variants up to ``batch``: 1, 2, 4, …,
+    ``batch``. A fixed-shape batch executable costs its full batch of
+    compute whatever the real rider count (filler slots are solved too),
+    so the scheduler launches the smallest warmed variant that fits the
+    riders it actually gathered — the ladder is what it picks from."""
+    out, v = [], 1
+    while v < batch:
+        out.append(v)
+        v <<= 1
+    out.append(int(batch))
+    return tuple(out)
+
+
+def ladder_fit(batch: int, riders: int) -> int:
+    """Smallest ladder variant holding ``riders`` (<= ``batch``)."""
+    for v in batch_ladder(batch):
+        if v >= riders:
+            return v
+    return int(batch)
+
+
 class BucketRouter:
     """Route (n, d) requests to buckets; optionally grow the table.
 

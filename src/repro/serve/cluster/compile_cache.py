@@ -8,14 +8,22 @@ compilation a *counted, warmup-time event*: every miss builds and
 hit returns the live executable, and the hit/miss/compile-seconds
 counters are the observability surface the end-to-end serve test asserts
 "zero recompiles after warmup" against.
+
+Each dispatch worker owns one of these (``device`` pins the worker's
+executables on multi-device hosts), and ``warm`` compiles the full
+power-of-two *batch ladder* per bucket — variants at rider counts
+1, 2, 4, …, ``bucket.batch`` — so the scheduler can launch an executable
+sized to the riders it actually gathered instead of paying a full
+batch's compute for a lone request.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
+from typing import Any, Optional
 
-from repro.serve.cluster.buckets import Bucket
+from repro.serve.cluster.buckets import Bucket, batch_ladder
 from repro.solver.compiled import BatchedDenseSolver, config_static_key
 from repro.solver.config import SolveConfig
 
@@ -33,7 +41,8 @@ class CacheStats:
 class CompileCache:
     """(bucket, config) -> compiled BatchedDenseSolver, with counters."""
 
-    def __init__(self):
+    def __init__(self, device: Any = None):
+        self.device = device
         self._lock = threading.Lock()
         self._cache: dict[tuple, BatchedDenseSolver] = {}
         self.stats = CacheStats()
@@ -54,18 +63,41 @@ class CompileCache:
             self.stats.misses += 1
             t0 = time.perf_counter()
             solver = BatchedDenseSolver(
-                bucket.batch, bucket.n, bucket.d, cfg).compile()
+                bucket.batch, bucket.n, bucket.d, cfg,
+                device=self.device).compile()
             self.stats.compile_seconds += time.perf_counter() - t0
             self._cache[key] = solver
             return solver
 
-    def warm(self, buckets, cfg: SolveConfig) -> dict:
-        """Precompile every (bucket, cfg) pair; returns the stats delta."""
-        before = self.stats.snapshot()
+    def lookup(self, bucket: Bucket, cfg: SolveConfig
+               ) -> Optional[BatchedDenseSolver]:
+        """A hit or None — never compiles (the scheduler uses this to
+        right-size a launch without risking a request-path compile)."""
+        with self._lock:
+            solver = self._cache.get(self.key(bucket, cfg))
+            if solver is not None:
+                self.stats.hits += 1
+            return solver
+
+    def warm(self, buckets, cfg: SolveConfig, *,
+             ladder: bool = False) -> dict:
+        """Precompile every (bucket, cfg) pair — with ``ladder=True``
+        every power-of-two batch variant per bucket too, so right-sized
+        launches stay compile-free. Returns the stats delta."""
+        before = self.snapshot()
         for b in buckets:
-            self.get(b, cfg)
-        after = self.stats.snapshot()
+            variants = (batch_ladder(b.batch) if ladder else (b.batch,))
+            for v in variants:
+                self.get(Bucket(b.n, b.d, v), cfg)
+        after = self.snapshot()
         return {k: after[k] - before[k] for k in before}
 
+    def snapshot(self) -> dict:
+        """Counter snapshot under the cache lock — one consistent copy
+        (the drain/scheduler threads mutate these concurrently)."""
+        with self._lock:
+            return self.stats.snapshot()
+
     def __len__(self) -> int:
-        return len(self._cache)
+        with self._lock:
+            return len(self._cache)

@@ -5,16 +5,34 @@ Shared by the ``repro.launch.cluster_serve`` driver and
 service's shape buckets, offer it at a Poisson arrival rate through the
 background scheduler, and report end-to-end latency percentiles +
 achieved throughput.
+
+``sources=N`` offers the load from N concurrent submitter threads, each
+an independent Poisson process at ``rps / N`` — the multi-process
+offered-load shape a scaled deployment sees (many clients, one service),
+which is what exercises the dispatch layer's admission and least-loaded
+routing. The service is in-process, so "multi-process" here means
+multiple concurrent arrival processes, not OS processes.
+
+``deadline_ms`` attaches an SLO deadline to every offered request;
+``LoadResult`` then splits errors into sheds (admission control) and
+deadline misses, so an overload run shows *bounded* latency plus
+explicit rejections instead of a blown-up p99. ``shape_counts`` records
+the offered (n, d) mix — the trace ``ClusterService.from_trace`` mines.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import Counter
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.data.synth import gaussian_blobs
+from repro.serve.cluster.dispatch import (
+    DeadlineExceededError, ServiceOverloadedError,
+)
 from repro.serve.cluster.service import ClusterService
 
 
@@ -27,8 +45,12 @@ class LoadResult:
     mean_ms: float
     n_requests: int
     n_errors: int
+    n_shed: int                # admission-control rejections
+    n_deadline: int            # deadline rejects + in-queue drops
     fast_frac: float           # fraction served by incremental assignment
     duration_s: float
+    sources: int = 1
+    shape_counts: dict = dataclasses.field(default_factory=dict)
 
     def row(self, name: str) -> dict:
         return {"name": name, **dataclasses.asdict(self)}
@@ -50,45 +72,84 @@ def synthetic_requests(n_requests: int, shapes: Sequence[tuple], *,
     return out
 
 
+def _offer(svc: ClusterService, requests: list, *, rps: float,
+           stream: Optional[str], stream_frac: float, seed: int,
+           deadline_ms: Optional[float], records: list) -> None:
+    """One submitter: a Poisson arrival process over its request slice."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rps, 1e-9), size=len(requests))
+    arrival = time.perf_counter()
+    for i, pts in enumerate(requests):
+        arrival += gaps[i]
+        now = time.perf_counter()
+        if arrival > now:
+            time.sleep(arrival - now)
+        t_sub = time.perf_counter()
+        use_stream = (stream is not None
+                      and (i == 0 or rng.random() < stream_frac))
+        rec = {"arrival": t_sub, "shape": tuple(pts.shape)}
+        try:
+            fut = svc.submit(pts, stream=stream if use_stream else None,
+                             mode="auto", deadline_ms=deadline_ms)
+        except Exception as exc:       # submit itself must never raise here
+            rec.update(done=time.perf_counter(), path="error", error=exc)
+            records.append(rec)
+            continue
+        records.append(rec)
+
+        def _stamp(f, r=rec):
+            exc = f.exception()
+            r.update(done=time.perf_counter(),
+                     path=(f.result().path if exc is None else "error"),
+                     error=exc)
+
+        fut.add_done_callback(_stamp)
+        rec["future"] = fut
+
+
 def run_load(svc: ClusterService, requests: list, *, rps: float,
              stream: Optional[str] = None, stream_frac: float = 0.0,
-             seed: int = 0, timeout: float = 300.0) -> LoadResult:
-    """Offer ``requests`` at Poisson rate ``rps`` req/s; measure
-    arrival-to-completion latency per request.
+             seed: int = 0, timeout: float = 300.0, sources: int = 1,
+             deadline_ms: Optional[float] = None) -> LoadResult:
+    """Offer ``requests`` at total Poisson rate ``rps`` req/s from
+    ``sources`` concurrent submitters; measure arrival-to-completion
+    latency per request.
 
     ``stream_frac`` of requests (after the first, which seeds the
     stream's exemplar set) ride the incremental fast path when ``stream``
-    is set. Latency includes queueing + padding + micro-batch solve.
+    is set. Latency includes queueing + padding + micro-batch solve;
+    shed / deadline-missed requests count as errors, not latency samples.
     """
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / max(rps, 1e-9), size=len(requests))
-    started = svc._thread is None
+    sources = max(int(sources), 1)
+    started = not svc.running
     if started:
         svc.start()
-    records: list[dict] = []
+    per_source: list[list] = [[] for _ in range(sources)]
     t_begin = time.perf_counter()
-    arrival = t_begin
     try:
-        for i, pts in enumerate(requests):
-            arrival += gaps[i]
-            now = time.perf_counter()
-            if arrival > now:
-                time.sleep(arrival - now)
-            t_sub = time.perf_counter()
-            use_stream = (stream is not None
-                          and (i == 0 or rng.random() < stream_frac))
-            fut = svc.submit(pts, stream=stream if use_stream else None,
-                             mode="auto")
-            rec = {"arrival": t_sub}
-            records.append(rec)
-            fut.add_done_callback(
-                lambda f, r=rec: r.update(
-                    done=time.perf_counter(),
-                    path=(f.result().path if f.exception() is None
-                          else "error")))
-            rec["future"] = fut
+        if sources == 1:
+            _offer(svc, requests, rps=rps, stream=stream,
+                   stream_frac=stream_frac, seed=seed,
+                   deadline_ms=deadline_ms, records=per_source[0])
+        else:
+            threads = []
+            for s in range(sources):
+                slice_ = requests[s::sources]
+                th = threading.Thread(
+                    target=_offer, args=(svc, slice_),
+                    kwargs=dict(rps=rps / sources, stream=stream,
+                                stream_frac=stream_frac, seed=seed + s,
+                                deadline_ms=deadline_ms,
+                                records=per_source[s]),
+                    name=f"loadgen-{s}", daemon=True)
+                th.start()
+                threads.append(th)
+            for th in threads:
+                th.join(timeout)
+        records = [r for recs in per_source for r in recs]
         for rec in records:
-            rec["future"].exception(timeout=timeout)
+            if "future" in rec:
+                rec["future"].exception(timeout=timeout)
         # Future.set_result wakes waiters BEFORE running done-callbacks,
         # so the stamps may lag .exception() by a beat — join on them
         deadline = time.perf_counter() + 5.0
@@ -102,7 +163,13 @@ def run_load(svc: ClusterService, requests: list, *, rps: float,
     lat = np.array([(r["done"] - r["arrival"]) * 1e3 for r in records
                     if "done" in r and r["path"] != "error"])
     n_err = sum(1 for r in records if r.get("path") == "error")
+    n_shed = sum(1 for r in records
+                 if isinstance(r.get("error"), ServiceOverloadedError))
+    n_dead = sum(1 for r in records
+                 if isinstance(r.get("error"), DeadlineExceededError))
     fast = sum(1 for r in records if r.get("path") == "assign")
+    shape_counts = Counter(f"{s[0]}x{s[1]}" for s in
+                           (r["shape"] for r in records))
     dur = t_end - t_begin
     return LoadResult(
         offered_rps=float(rps),
@@ -111,4 +178,6 @@ def run_load(svc: ClusterService, requests: list, *, rps: float,
         p99_ms=float(np.percentile(lat, 99)) if len(lat) else float("nan"),
         mean_ms=float(lat.mean()) if len(lat) else float("nan"),
         n_requests=len(records), n_errors=n_err,
-        fast_frac=fast / max(len(records), 1), duration_s=dur)
+        n_shed=n_shed, n_deadline=n_dead,
+        fast_frac=fast / max(len(records), 1), duration_s=dur,
+        sources=sources, shape_counts=dict(shape_counts))

@@ -7,41 +7,64 @@ service:
 * ``submit(points, ...) -> Future`` — requests enter a queue and resolve
   to a ``ClusterResponse``;
 * a shape-bucket micro-batcher: requests padded to a small set of (n, d)
-  buckets, compatible requests batched ``bucket.batch`` at a time through
-  one vmap-ed, AOT-compiled dense solve (``repro.solver.compiled``);
-* an explicit compile cache keyed on (bucket, config) with hit/miss
-  counters and a ``warmup()`` API, so the steady state is compile-free
-  and *provably* so;
+  buckets, compatible requests batched through one vmap-ed, AOT-compiled
+  dense solve (``repro.solver.compiled``), launched at the smallest
+  warmed power-of-two *batch variant* that fits the gathered riders
+  (``batch_ladder`` — a fixed-shape executable costs its full batch of
+  compute whatever the rider count, so right-sizing the launch is what
+  keeps per-request cost proportional to actual traffic);
+* a **multi-worker dispatch layer** (``dispatch.py``): ``workers`` queue
+  shards, each with its own ``CompileCache`` (pinned per device on
+  multi-device hosts) and scheduler thread, least-loaded admission,
+  and work stealing so one hot shard never strands idle capacity;
+* **SLO-aware scheduling**: ``submit(deadline_ms=...)`` sets a deadline
+  per request; batch closing is deadline-driven (a gathering batch
+  launches early enough that the expected solve lands inside the
+  earliest rider's deadline, instead of a fixed wait window), work whose
+  deadline already passed is dropped with ``DeadlineExceededError``
+  rather than burning capacity, and bounded queues (``max_queue``) shed
+  excess load with explicit ``ServiceOverloadedError`` rejections —
+  overload shows up as fast failures and ``stats.sheds``, not unbounded
+  latency;
+* an explicit compile cache per worker with hit/miss counters and a
+  ``warmup()`` API, so the steady state is compile-free per worker and
+  *provably* so;
 * an incremental fast path per logical stream: once a stream has a full
   solve, new points are assigned to its exemplar set in O(n * K)
   (``incremental.py``), and a drift threshold triggers a background full
   re-solve;
-* big-N overflow routing: a request larger than every bucket the service
-  will compile (``max_bucket_n``) runs as one direct ``dense_topk``
-  solve with a capped neighbor count (``overflow_k``) — served, not
-  rejected, and without growing the compile cache; past the dense_topk
-  comfort ceiling (``overflow_coarsen_n``) it escapes further to the
-  two-level ``coarsen`` backend, whose peak state no longer scales
-  quadratically (or even O(n*k)) with the request.
+* big-N overflow routing, preserved per worker: a request larger than
+  every bucket the service will compile (``max_bucket_n``) runs as one
+  direct ``dense_topk`` solve with a capped neighbor count
+  (``overflow_k``) — served, not rejected, and without growing any
+  compile cache; past the dense_topk comfort ceiling
+  (``overflow_coarsen_n``) it escapes further to the two-level
+  ``coarsen`` backend.
 
-Pumping is explicit or threaded: call ``drain()`` to process the queue on
-the caller's thread (deterministic — what the tests and benchmarks use),
-or ``start()`` a scheduler thread that batches with a small gather window
-(``max_wait_ms``) the way a live deployment would.
+Pumping is explicit or threaded: call ``drain()`` to process every
+worker's queue on the caller's thread (deterministic — what the tests
+and benchmarks use), or ``start()`` one scheduler thread per worker that
+gathers batches under the SLO rules above.
+
+``ClusterService.from_trace(...)`` builds the bucket table from observed
+traffic (a ``BENCH_serve.json`` record or a shape list) instead of hand
+configuration — see ``traffic.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from collections import OrderedDict, deque
 from concurrent.futures import Future
 from typing import Any, Optional
 
 import numpy as np
 
-from repro.serve.cluster.buckets import Bucket, BucketRouter
-from repro.serve.cluster.compile_cache import CompileCache
+from repro.serve.cluster.buckets import Bucket, BucketRouter, ladder_fit
+from repro.serve.cluster.dispatch import (
+    ClusterRequest, DeadlineExceededError, ServiceOverloadedError,
+    WorkerShard, close_at, pop_batch, steal_batch,
+)
 from repro.serve.cluster.incremental import AssignResult, StreamState
 from repro.solver.compiled import slice_request
 from repro.solver.config import SolveConfig
@@ -65,18 +88,9 @@ class ClusterResponse:
     bucket: Optional[tuple] = None     # (n, d, batch) the request rode in
     stream: Optional[str] = None
     generation: Optional[int] = None   # stream solve generation consumed
+    worker: Optional[int] = None       # dispatch worker that ran the solve
     queue_ms: float = 0.0
     solve_ms: float = 0.0
-
-
-@dataclasses.dataclass
-class _Pending:
-    points: np.ndarray
-    n: int
-    future: Future
-    stream: Optional[str]
-    submitted: float
-    internal: bool = False             # drift-triggered re-solve
 
 
 @dataclasses.dataclass
@@ -90,15 +104,18 @@ class ServiceStats:
     overflow_solves: int = 0           # big-N requests routed around buckets
     overflow_coarsen_solves: int = 0   # of those, past the dense_topk
                                        # ceiling -> coarsen backend
+    sheds: int = 0                     # admission control rejections
+    deadline_rejects: int = 0          # deadline already expired at submit
+    deadline_drops: int = 0            # deadline expired while queued
+    stolen_batches: int = 0            # batches run by a non-owning worker
     cache: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> dict:
-        d = dataclasses.asdict(self)
-        return d
+        return dataclasses.asdict(self)
 
 
 class ClusterService:
-    """Shape-bucketed, compile-cached clustering request engine."""
+    """Shape-bucketed, compile-cached, multi-worker clustering engine."""
 
     def __init__(self, *, config: Optional[SolveConfig] = None,
                  buckets=(), auto_bucket: bool = True, max_batch: int = 8,
@@ -107,7 +124,9 @@ class ClusterService:
                  stream_max_points: int = 100_000,
                  max_bucket_n: int = 4096, overflow: str = "route",
                  overflow_k: int = 64,
-                 overflow_coarsen_n: Optional[int] = 200_000):
+                 overflow_coarsen_n: Optional[int] = 200_000,
+                 workers: int = 1, max_queue: Optional[int] = None,
+                 batch_ladder: bool = True):
         cfg = config or SolveConfig(stop="converged", max_iterations=100)
         # fail at construction, not mid-traffic: the batched dense path
         # ignores sparse-topk k, so a config carrying it is a mistake
@@ -120,10 +139,11 @@ class ClusterService:
         if overflow not in ("route", "reject"):
             raise ValueError(f"overflow must be 'route' or 'reject'; "
                              f"got {overflow!r}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1 (got {workers})")
         self.config = cfg
         self.router = BucketRouter(buckets, auto=auto_bucket,
                                    default_batch=max_batch)
-        self.cache = CompileCache()
         self.stats = ServiceStats()
         self.max_wait_ms = float(max_wait_ms)
         # big-N overflow: requests past the largest bucket the service
@@ -139,45 +159,98 @@ class ClusterService:
         # (None disables the escape hatch)
         self.overflow_coarsen_n = (None if overflow_coarsen_n is None
                                    else int(overflow_coarsen_n))
-        self._overflow_queue: "deque[_Pending]" = deque()
-        self._overflow_turn = True
+        self.batch_ladder = bool(batch_ladder)
         self._drift_threshold = drift_threshold
         self._drift_halflife = drift_halflife
         self._stream_max_points = stream_max_points
 
         self._lock = threading.Lock()
-        self._work = threading.Condition(self._lock)
-        self._queues: "OrderedDict[tuple, deque[_Pending]]" = OrderedDict()
         self._streams: dict[str, StreamState] = {}
-        self._thread: Optional[threading.Thread] = None
-        self._running = False
+        self._rr = 0                    # dispatch tie-break rotation
+        devices = _worker_devices(int(workers))
+        self.workers = [WorkerShard(i, device=devices[i],
+                                    max_queue=max_queue)
+                        for i in range(int(workers))]
+
+    # --------------------------------------------------------- from_trace
+    @classmethod
+    def from_trace(cls, trace, *, config: Optional[SolveConfig] = None,
+                   max_buckets: int = 4, max_batch: int = 8,
+                   **service_kw) -> "ClusterService":
+        """Build the bucket table from observed traffic instead of hand
+        configuration: ``trace`` is a ``BENCH_serve.json`` record (path
+        or parsed dict — its rows carry per-shape request counts), a
+        loadgen shape-count dict, or a plain iterable of ``(n, d)`` /
+        ``(n, d, count)`` shapes. The fitter (``traffic.fit_buckets``)
+        picks the (n, d, batch) set minimizing expected padded compute.
+        Traffic-fitted deployments default to a *fixed* table
+        (``auto_bucket=False``) — the SLO posture; pass
+        ``auto_bucket=True`` to allow growth anyway."""
+        from repro.serve.cluster.traffic import fit_buckets, mine_trace
+
+        shapes = mine_trace(trace)
+        fitted = fit_buckets(shapes, max_buckets=max_buckets,
+                             max_batch=max_batch)
+        service_kw.setdefault("auto_bucket", False)
+        return cls(config=config, buckets=fitted, **service_kw)
+
+    # ---------------------------------------------------------- properties
+    @property
+    def cache(self):
+        """Worker 0's compile cache (single-worker compatibility handle;
+        multi-worker introspection goes through ``snapshot()``)."""
+        return self.workers[0].cache
+
+    @property
+    def running(self) -> bool:
+        return any(w.running for w in self.workers)
+
+    @property
+    def max_wait_s(self) -> float:
+        return self.max_wait_ms / 1e3
 
     # ------------------------------------------------------------ warmup
     def warmup(self, shapes=None) -> dict:
-        """Compile every (bucket, service-config) executable up front.
+        """Compile every (bucket, service-config) executable up front —
+        on every worker's cache, including the power-of-two batch-variant
+        ladder when ``batch_ladder`` is on.
 
         ``shapes``: extra ``(n, d)`` / ``(n, d, batch)`` specs to register
         before compiling (the expected traffic envelope). Returns the
-        compile-cache delta — ``misses`` is the number of XLA compilations
-        paid here instead of on the request path. Warmup always uses the
-        service's own config: that is the key every request hits.
+        compile-cache delta summed over workers — ``misses`` is the
+        number of XLA compilations paid here instead of on the request
+        path. Warmup always uses the service's own config: that is the
+        key every request hits.
         """
         for spec in shapes or ():
             n, d, *rest = spec
             self.router.add(Bucket(int(n), int(d),
                                    int(rest[0]) if rest
                                    else self.router.default_batch))
-        return self.cache.warm(self.router.buckets, self.config)
+        total = {"hits": 0, "misses": 0, "compile_seconds": 0.0}
+        for w in self.workers:
+            delta = w.cache.warm(self.router.buckets, self.config,
+                                 ladder=self.batch_ladder)
+            for k in total:
+                total[k] += delta[k]
+        return total
 
     # ------------------------------------------------------------ submit
     def submit(self, points, *, stream: Optional[str] = None,
-               mode: str = "auto") -> Future:
+               mode: str = "auto",
+               deadline_ms: Optional[float] = None) -> Future:
         """Enqueue a clustering request; returns a Future[ClusterResponse].
 
         ``mode``: "auto" rides the incremental fast path whenever the
         stream already has an exemplar set, "full" forces a micro-batched
         solve, "assign" demands the fast path (errors if the stream has
         no exemplars yet).
+
+        ``deadline_ms``: SLO budget relative to now. The scheduler closes
+        a gathering batch early rather than breach it; a request whose
+        deadline passes while queued fails with ``DeadlineExceededError``
+        (a deadline that is already non-positive fails immediately —
+        counted in ``stats.deadline_rejects``).
         """
         if mode not in ("auto", "full", "assign"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -196,6 +269,18 @@ class ClusterService:
             raise ValueError(f"points must be (n, d); got {pts.shape}")
         fut: Future = Future()
         now = time.perf_counter()
+        if deadline_ms is not None and deadline_ms <= 0:
+            # expired before it was ever queued: reject at the door so the
+            # caller's error budget sees it in microseconds, not after a
+            # pointless queue round-trip
+            with self._lock:
+                self.stats.requests += 1
+                self.stats.deadline_rejects += 1
+            fut.set_exception(DeadlineExceededError(
+                f"deadline_ms={deadline_ms} already expired at submit"))
+            return fut
+        deadline = (None if deadline_ms is None
+                    else now + float(deadline_ms) / 1e3)
         with self._lock:
             self.stats.requests += 1
             st = self._stream_state(stream) if stream else None
@@ -219,7 +304,8 @@ class ClusterService:
             # degenerate single-point request: trivially its own exemplar
             fut.set_result(self._trivial_response(pts, stream))
             return fut
-        self._enqueue(_Pending(pts, pts.shape[0], fut, stream, now))
+        self._enqueue(ClusterRequest(pts, pts.shape[0], fut, stream, now,
+                                     deadline=deadline))
         return fut
 
     def solve_sync(self, points, **kw) -> ClusterResponse:
@@ -257,9 +343,10 @@ class ClusterService:
             window = max((b.n for b in self.router.buckets),
                          default=self._stream_max_points)
             buf = st.points[-window:].copy()
-            self._enqueue(_Pending(buf, len(buf), Future(),
-                                   st.stream_id, time.perf_counter(),
-                                   internal=True))
+            self._enqueue(ClusterRequest(buf, len(buf), Future(),
+                                         st.stream_id,
+                                         time.perf_counter(),
+                                         internal=True))
 
     def _trivial_response(self, pts, stream) -> ClusterResponse:
         n = pts.shape[0]
@@ -276,21 +363,21 @@ class ClusterService:
                 max_points=self._stream_max_points)
         return st
 
-    def _enqueue(self, req: _Pending) -> None:
+    def _enqueue(self, req: ClusterRequest) -> None:
         # explicitly provisioned buckets always win (whatever their
         # size); max_bucket_n caps only auto-growth, so overflow takes
-        # whatever no warmed executable covers
-        bucket = self.router.route(req.n, req.points.shape[1],
-                                   max_grow_n=self.max_bucket_n)
+        # whatever no warmed executable covers. The router mutates its
+        # table under auto-growth — serialize it.
+        with self._lock:
+            bucket = self.router.route(req.n, req.points.shape[1],
+                                       max_grow_n=self.max_bucket_n)
         if bucket is None:
             # bucket overflow: n is past every compiled shape and past
             # what auto-growth may mint. Route to a direct sparse
             # dense_topk solve instead of rejecting — O(n * k) state,
             # no new compile-cache entry.
             if self.overflow == "route":
-                with self._work:
-                    self._overflow_queue.append(req)
-                    self._work.notify()
+                self._dispatch(req, None)
                 return
             req.future.set_exception(ValueError(
                 f"no bucket fits request shape {req.points.shape} "
@@ -298,108 +385,168 @@ class ClusterService:
                 "routing is off; add a bucket via warmup(shapes=...) or "
                 "construct the service with overflow='route'"))
             return
-        with self._work:
-            self._queues.setdefault(bucket.key, deque()).append(req)
-            self._work.notify()
+        self._dispatch(req, bucket.key)
+
+    def _dispatch(self, req: ClusterRequest, key: Optional[tuple]) -> None:
+        """Least-loaded worker admission with round-robin tie-break;
+        internal re-solves bypass the bound (no caller is waiting on
+        them, and they are capped at one in flight per stream). When
+        every shard is full the request is shed — an explicit, immediate
+        rejection instead of unbounded queue growth."""
+        with self._lock:
+            rr = self._rr = (self._rr + 1) % len(self.workers)
+        order = sorted(self.workers,
+                       key=lambda w: (w.depth(),
+                                      (w.wid - rr) % len(self.workers)))
+        if req.internal:
+            order[0].try_admit(req, key, force=True)
+            return
+        for w in order:
+            if w.try_admit(req, key):
+                return
+        with self._lock:
+            self.stats.sheds += 1
+        req.future.set_exception(ServiceOverloadedError(
+            f"all {len(self.workers)} worker queues full "
+            f"(max_queue={self.workers[0].max_queue}); request shed"))
 
     # ----------------------------------------------------------- pumping
     def drain(self) -> int:
-        """Process queued micro-batches on the caller's thread until the
-        queue is empty (drift re-solves enqueued mid-drain included).
-        Returns the number of micro-batches executed."""
+        """Process queued micro-batches on the caller's thread until
+        every worker's queue is empty (drift re-solves enqueued mid-drain
+        included). Returns the number of batches executed."""
         batches = 0
         while True:
-            grabbed = self._grab_batch()
-            if grabbed is None:
+            progressed = False
+            for w in self.workers:
+                grabbed = pop_batch(w)
+                if grabbed is not None:
+                    self._run_batch(w, *grabbed)
+                    batches += 1
+                    progressed = True
+            if not progressed:
                 return batches
-            self._run_batch(*grabbed)
+
+    def drain_worker(self, wid: int) -> int:
+        """Pump a single worker on the caller's thread — its own shard
+        first, then stealing from peers until nothing is reachable.
+        Deterministic work-stealing surface (tests, benchmarks)."""
+        w = self.workers[wid]
+        batches = 0
+        while True:
+            grabbed = pop_batch(w)
+            if grabbed is None:
+                grabbed = steal_batch(w, self.workers)
+                if grabbed is None:
+                    return batches
+                with self._lock:
+                    self.stats.stolen_batches += 1
+            self._run_batch(w, *grabbed)
             batches += 1
 
     def start(self) -> None:
-        """Background scheduler: gathers up to ``bucket.batch`` requests
-        per micro-batch within a ``max_wait_ms`` window."""
-        with self._lock:
-            if self._running:
-                return
-            self._running = True
-        self._thread = threading.Thread(
-            target=self._loop, name="cluster-serve", daemon=True)
-        self._thread.start()
+        """Background scheduling: one gather/solve thread per worker,
+        closing batches under the SLO rules (deadline slack or the
+        ``max_wait_ms`` cap, whichever is tighter)."""
+        for w in self.workers:
+            with w.work:
+                if w.running:
+                    continue
+                w.running = True
+            w.thread = threading.Thread(
+                target=self._worker_loop, args=(w,),
+                name=f"cluster-serve-{w.wid}", daemon=True)
+            w.thread.start()
 
     def stop(self, timeout: float = 10.0) -> None:
-        with self._work:
-            self._running = False
-            self._work.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout)
-            self._thread = None
+        for w in self.workers:
+            with w.work:
+                w.running = False
+                w.work.notify_all()
+        for w in self.workers:
+            if w.thread is not None:
+                w.thread.join(timeout)
+                w.thread = None
 
-    def _loop(self) -> None:
+    def _worker_loop(self, w: WorkerShard) -> None:
         while True:
-            with self._work:
-                while (self._running and not self._queues
-                       and not self._overflow_queue):
-                    self._work.wait(0.1)
-                if (not self._running and not self._queues
-                        and not self._overflow_queue):
+            now = time.perf_counter()
+            with w.work:
+                t = close_at(w, now, self.max_wait_s)
+                if t is None and not w.running:
                     return
-            # brief gather window so near-simultaneous requests share a
-            # batch instead of each riding alone
-            if self.max_wait_ms > 0:
-                time.sleep(self.max_wait_ms / 1e3)
-            grabbed = self._grab_batch()
-            if grabbed is not None:
-                self._run_batch(*grabbed)
-
-    def _grab_batch(self):
-        """Pop up to ``batch`` requests from the oldest non-empty bucket
-        queue. FIFO across buckets keeps tail latency bounded under a
-        skewed mix. Overflow requests ride alone (``bucket=None``) and
-        alternate with bucketed work — strict priority either way would
-        let one traffic class starve the other (an overflow solve is
-        seconds; a heavy overflow stream must not wedge cheap
-        micro-batches, nor vice versa)."""
-        with self._work:
-            if self._overflow_queue and (self._overflow_turn
-                                         or not self._queues):
-                self._overflow_turn = False
-                return None, [self._overflow_queue.popleft()]
-            self._overflow_turn = True
-            for key in list(self._queues):
-                q = self._queues[key]
-                if not q:
-                    del self._queues[key]
+                if t is not None and t > now:
+                    # gather: sleep to the close instant, but wake on new
+                    # arrivals (they can only tighten the close time) and
+                    # re-evaluate
+                    w.work.wait(min(t - now, 0.05))
                     continue
-                bucket = Bucket(*key)
-                reqs = [q.popleft() for _ in range(min(len(q),
-                                                       bucket.batch))]
-                if not q:
-                    del self._queues[key]
-                return bucket, reqs
-            if self._overflow_queue:
-                # bucket queues turned out empty — don't strand overflow
-                self._overflow_turn = False
-                return None, [self._overflow_queue.popleft()]
-            return None
+            if t is None:
+                # idle: try to steal from a deeper peer, then nap briefly
+                grabbed = steal_batch(w, self.workers)
+                if grabbed is None:
+                    with w.work:
+                        if close_at(w, time.perf_counter(),
+                                    self.max_wait_s) is None:
+                            w.work.wait(0.02)
+                    continue
+                with self._lock:
+                    self.stats.stolen_batches += 1
+            else:
+                grabbed = pop_batch(w)
+                if grabbed is None:       # raced with a thief
+                    continue
+            self._run_batch(w, *grabbed)
 
     # ------------------------------------------------------ micro-batch
-    def _run_batch(self, bucket: Optional[Bucket], reqs) -> None:
-        """Pad, run the bucket's compiled solve once, finish each rider.
+    def _drop_expired(self, req: ClusterRequest) -> None:
+        with self._lock:
+            self.stats.deadline_drops += 1
+        if not req.future.done():
+            req.future.set_exception(DeadlineExceededError(
+                "deadline expired while queued (the service is past "
+                "this request's SLO; see stats.deadline_drops)"))
+
+    def _solver_for(self, w: WorkerShard, bucket: Bucket, riders: int):
+        """The smallest warmed batch variant that fits ``riders`` — a
+        right-sized launch costs the variant's compute, not the full
+        bucket's. Falls back to the bucket's own batch (compiling if it
+        must — only reachable for auto-grown, never-warmed buckets)."""
+        if self.batch_ladder:
+            vb = Bucket(bucket.n, bucket.d,
+                        ladder_fit(bucket.batch, riders))
+            solver = w.cache.lookup(vb, self.config)
+            if solver is not None:
+                return solver, vb
+        return w.cache.get(bucket, self.config), bucket
+
+    def _run_batch(self, w: WorkerShard, bucket: Optional[Bucket],
+                   reqs) -> None:
+        """Pad, run one right-sized compiled solve, finish each rider.
         ``bucket=None`` is an overflow request: one direct sparse solve."""
         if bucket is None:
-            self._run_overflow(reqs[0])
+            self._run_overflow(w, reqs[0])
+            return
+        now = time.perf_counter()
+        live = []
+        for r in reqs:
+            if r.expired(now) and not r.internal:
+                self._drop_expired(r)
+            else:
+                live.append(r)
+        if not live:
             return
         t0 = time.perf_counter()
         try:
-            solver = self.cache.get(bucket, self.config)
-            pts = np.zeros((bucket.batch, bucket.n, bucket.d), np.float32)
-            n_real = np.full((bucket.batch,), 2, np.int32)  # inert filler
-            for i, r in enumerate(reqs):
+            solver, vb = self._solver_for(w, bucket, len(live))
+            pts = np.zeros((vb.batch, bucket.n, bucket.d), np.float32)
+            n_real = np.full((vb.batch,), 2, np.int32)  # inert filler
+            for i, r in enumerate(live):
                 pts[i] = self.router.pad_points(r.points, bucket)
                 n_real[i] = r.n
             raw = solver.run(pts, n_real)
         except Exception as exc:  # one bad batch must not wedge the queue
-            for r in reqs:
+            for r in live:
                 if r.internal and r.stream is not None:
                     # a failed drift re-solve must release the pending
                     # flag, or the stream can never schedule another one
@@ -411,13 +558,14 @@ class ClusterService:
                 if not r.future.done():
                     r.future.set_exception(exc)
             return
-        dt = (time.perf_counter() - t0) * 1e3
+        dt_s = time.perf_counter() - t0
+        w.note_launch(bucket.key, dt_s)
+        dt = dt_s * 1e3
         with self._lock:
             self.stats.micro_batches += 1
-            self.stats.full_solves += len(reqs)
-            self.stats.batched_requests += max(len(reqs) - 1, 0)
-            self.stats.cache = self.cache.stats.snapshot()
-        for i, r in enumerate(reqs):
+            self.stats.full_solves += len(live)
+            self.stats.batched_requests += max(len(live) - 1, 0)
+        for i, r in enumerate(live):
             rbr, pref = slice_request(raw, i, r.n, self.config.stop)
             result = finalize_raw(rbr, r.n, "serve_batched")
             gen = None
@@ -427,6 +575,7 @@ class ClusterService:
                 r.future.set_result(ClusterResponse(
                     path="full", labels=result.labels[0], solve=result,
                     bucket=bucket.key, stream=r.stream, generation=gen,
+                    worker=w.wid,
                     queue_ms=(t0 - r.submitted) * 1e3, solve_ms=dt))
 
     # -------------------------------------------------------- overflow
@@ -463,7 +612,7 @@ class ClusterService:
             return float(np.asarray(topk_preferences(vals, strategy))[0])
         return 0.0
 
-    def _run_overflow(self, req: _Pending) -> None:
+    def _run_overflow(self, w: WorkerShard, req: ClusterRequest) -> None:
         """Big-N request -> one dense_topk solve with a capped neighbor
         count; past ``overflow_coarsen_n`` (and with a partition-
         compatible preference), one two-level coarsen solve instead —
@@ -471,6 +620,9 @@ class ClusterService:
         from repro.solver import solve
         from repro.solver.coarsen import coarsen_pref_ok
 
+        if req.expired() and not req.internal:
+            self._drop_expired(req)
+            return
         t0 = time.perf_counter()
         use_coarsen = (self.overflow_coarsen_n is not None
                        and req.n > self.overflow_coarsen_n
@@ -509,9 +661,10 @@ class ClusterService:
             req.future.set_result(ClusterResponse(
                 path="full", labels=result.labels[0], solve=result,
                 bucket=None, stream=req.stream, generation=gen,
+                worker=w.wid,
                 queue_ms=(t0 - req.submitted) * 1e3, solve_ms=dt))
 
-    def _install_stream(self, r: _Pending, result: SolveResult,
+    def _install_stream(self, r: ClusterRequest, result: SolveResult,
                         pref: float) -> int:
         """A stream-tagged full solve installs its finest-level exemplar
         set (coordinates) as the stream's assignment target."""
@@ -542,9 +695,38 @@ class ClusterService:
             }
 
     def snapshot(self) -> dict:
+        """One consistent stats view: the counter dict is a single copy
+        taken under the service lock (the drain/scheduler threads mutate
+        counters concurrently — field-by-field reads would tear), then
+        per-worker cache/queue gauges, each copied under its own lock."""
         with self._lock:
             s = self.stats.snapshot()
-            s["cache"] = self.cache.stats.snapshot()
-            s["buckets"] = [b.key for b in self.router.buckets]
-            s["compiled"] = len(self.cache)
+            buckets = [b.key for b in self.router.buckets]
+        agg = {"hits": 0, "misses": 0, "compile_seconds": 0.0}
+        per_worker, compiled = [], 0
+        for w in self.workers:
+            c = w.cache.snapshot()
+            per_worker.append({"worker": w.wid, "queued": w.depth(),
+                               "compiled": len(w.cache), "cache": c})
+            for k in agg:
+                agg[k] += c[k]
+            compiled += len(w.cache)
+        s["cache"] = agg
+        s["workers"] = per_worker
+        s["buckets"] = buckets
+        s["compiled"] = compiled
         return s
+
+
+def _worker_devices(n_workers: int) -> list:
+    """Device per worker: round-robin over the host's devices when there
+    is more than one (each worker's cache compiles against its own), else
+    None (jax default device — skips placement contexts entirely)."""
+    try:
+        import jax
+        devs = jax.devices()
+    except Exception:       # pragma: no cover - jax always importable here
+        devs = []
+    if len(devs) <= 1:
+        return [None] * n_workers
+    return [devs[i % len(devs)] for i in range(n_workers)]

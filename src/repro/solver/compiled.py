@@ -103,14 +103,23 @@ class BatchedDenseSolver:
     host arrays through the two compiled executables.
     """
 
-    def __init__(self, batch: int, n: int, d: int, cfg: SolveConfig):
+    def __init__(self, batch: int, n: int, d: int, cfg: SolveConfig,
+                 device=None):
         if n < 2:
             raise ValueError(f"bucket n must be >= 2 (got {n})")
         self.batch, self.n, self.d = int(batch), int(n), int(d)
         self.cfg = cfg
         self.order = batched_order(cfg.backend)
+        # multi-worker serving pins each worker's executables to one
+        # device; None keeps jax's default (the single-device case)
+        self.device = device
         self._prepare_exec = None
         self._solve_exec = None
+
+    def _device_scope(self):
+        import contextlib
+        return (contextlib.nullcontext() if self.device is None
+                else jax.default_device(self.device))
 
     # ----------------------------------------------------------- tracing
     def _prepare_fn(self, points, n_real):
@@ -154,13 +163,14 @@ class BatchedDenseSolver:
         b, n, d = self.batch, self.n, self.d
         pts = jax.ShapeDtypeStruct((b, n, d), jnp.float32)
         nr = jax.ShapeDtypeStruct((b,), jnp.int32)
-        self._prepare_exec = jax.jit(self._prepare_fn).lower(
-            pts, nr).compile()
-        s3 = jax.ShapeDtypeStruct(
-            (b, self.cfg.levels, n, n), jnp.float32)
-        # donate the stack: XLA aliases it into the solve's message state
-        self._solve_exec = jax.jit(
-            self._solve_fn, donate_argnums=0).lower(s3).compile()
+        with self._device_scope():
+            self._prepare_exec = jax.jit(self._prepare_fn).lower(
+                pts, nr).compile()
+            s3 = jax.ShapeDtypeStruct(
+                (b, self.cfg.levels, n, n), jnp.float32)
+            # donate the stack: XLA aliases it into the solve's state
+            self._solve_exec = jax.jit(
+                self._solve_fn, donate_argnums=0).lower(s3).compile()
         return self
 
     # ------------------------------------------------------------- run
@@ -175,11 +185,12 @@ class BatchedDenseSolver:
             raise RuntimeError(
                 "BatchedDenseSolver.run before compile(); warm the "
                 "service (ClusterService.warmup) first")
-        s3b, pref = self._prepare_exec(
-            jnp.asarray(points, jnp.float32),
-            jnp.asarray(n_real, jnp.int32))
-        # s3b is donated: the executable owns its buffer from here on
-        e, n_sweeps, conv, trace, _s = self._solve_exec(s3b)
+        with self._device_scope():
+            s3b, pref = self._prepare_exec(
+                jnp.asarray(points, jnp.float32),
+                jnp.asarray(n_real, jnp.int32))
+            # s3b is donated: the executable owns its buffer from here on
+            e, n_sweeps, conv, trace, _s = self._solve_exec(s3b)
         del _s  # device-side alias of the donated stack; never fetched
         return BatchedRawResult(
             exemplars=np.asarray(e), n_sweeps=np.asarray(n_sweeps),

@@ -1,0 +1,79 @@
+"""Docs lint: the reference docs must cover the public surface.
+
+Asserts that
+
+* every registered solver backend name, and
+* every ``SolveConfig`` field
+
+appears in ``docs/solver.md``, and that every ``ClusterService``
+constructor knob appears in ``docs/serving.md``. Run from the repo
+root (CI runs it in the tier-1 job):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exits nonzero listing everything undocumented — adding a backend,
+config field, or serving knob without documenting it fails CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _words(path: pathlib.Path) -> set:
+    """Identifier-ish tokens in a markdown file (code spans included)."""
+    return set(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", path.read_text()))
+
+
+def check_solver_doc() -> list:
+    from repro.solver import list_backends
+    from repro.solver.config import SolveConfig
+
+    doc = REPO / "docs" / "solver.md"
+    words = _words(doc)
+    missing = []
+    for name in sorted(list_backends()):
+        if name not in words:
+            missing.append(f"{doc.name}: backend {name!r} undocumented")
+    for f in dataclasses.fields(SolveConfig):
+        if f.name not in words:
+            missing.append(
+                f"{doc.name}: SolveConfig.{f.name} undocumented")
+    return missing
+
+
+def check_serving_doc() -> list:
+    from repro.serve.cluster import ClusterService
+
+    doc = REPO / "docs" / "serving.md"
+    words = _words(doc)
+    missing = []
+    sig = inspect.signature(ClusterService.__init__)
+    for name in sig.parameters:
+        if name == "self":
+            continue
+        if name not in words:
+            missing.append(
+                f"{doc.name}: ClusterService kwarg {name!r} undocumented")
+    return missing
+
+
+def main() -> int:
+    missing = check_solver_doc() + check_serving_doc()
+    if missing:
+        print("docs lint FAILED — undocumented public surface:")
+        for m in missing:
+            print(f"  - {m}")
+        return 1
+    print("docs lint OK: every backend, SolveConfig field, and "
+          "ClusterService knob is documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
