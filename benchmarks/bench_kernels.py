@@ -147,6 +147,21 @@ def run_solver_sweeps(n: int, iters: int, reps: int) -> list:
                  "flops": 2 * 4 * 3 * n * (k + 1),
                  "bytes": 2 * 4 * 3 * n * (k + 1) * 4,
                  "mesh": [mesh.shape["workers"]]})
+
+    # graph_affinity: the full Borůvka contraction while_loop over the
+    # same compressed layout (per-round cost, not per-HAP-sweep — rounds
+    # to convergence is O(log N), so this times the whole solve)
+    from repro.graph import EdgeList
+    from repro.graph.affinity import run_graph_affinity
+    el = EdgeList.from_topk(np.asarray(s3k[0][:, 1:]),
+                            np.asarray(idx[:, 1:])).canonical()
+    gvals, gidx = el.to_topk()
+    fn = lambda v_: run_graph_affinity(v_, gidx, levels=1)[0]
+    t = _time(fn, gvals, reps=reps)
+    rows.append({"name": f"graph_affinity_n{n}_k{k}", "us": t * 1e6,
+                 # ~log2(N) rounds x 2 segment reductions over N*deg slots
+                 "flops": 2 * int(np.log2(n)) * el.n_edges,
+                 "bytes": 2 * int(np.log2(n)) * el.n_edges * 4})
     return rows
 
 

@@ -24,6 +24,23 @@ def canonicalize(e: jnp.ndarray) -> jnp.ndarray:
     return e[e]
 
 
+def flatten_pointers(e: np.ndarray) -> np.ndarray:
+    """Iterate ``e[e]`` to its fixed point (full pointer jumping).
+
+    The graph backend's host-side mirror: Borůvka hooking leaves parent
+    *chains* (cluster -> cluster -> ... -> root), so one ``canonicalize``
+    pass is not enough — each doubling halves the chain depth, reaching
+    the root map in O(log depth) passes. Idempotent labelings (every AP
+    backend's canonicalized output) return unchanged.
+    """
+    e = np.asarray(e)
+    while True:
+        e2 = e[e]
+        if np.array_equal(e2, e):
+            return e2
+        e = e2
+
+
 def dense_labels(e: np.ndarray) -> tuple[np.ndarray, int]:
     """Map exemplar indices to contiguous cluster ids."""
     uniq, inv = np.unique(np.asarray(e), return_inverse=True)

@@ -1,0 +1,10 @@
+"""Graph-native clustering: edge lists as first-class ``solve()`` input.
+
+``repro.graph.edges.EdgeList`` is the COO container the engine routes —
+every existing backend can consume one (densify-or-topk routing), and
+``repro.graph.affinity`` adds the Borůvka-style ``graph_affinity``
+backend that consumes the edge structure directly.
+"""
+from repro.graph.edges import EdgeList
+
+__all__ = ["EdgeList"]

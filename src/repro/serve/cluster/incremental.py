@@ -15,6 +15,18 @@ existing cluster, i.e. the exemplar set no longer explains it. When the
 exponentially-weighted drift fraction crosses the threshold the stream is
 stale and the service schedules a background full re-solve over the
 stream's accumulated points.
+
+Preference re-calibration: the drift test compares against a preference
+derived from the *last solved* window, so a stream whose data scale
+shifts (tighter clusters -> similarities compress toward 0, wider ->
+they spread) would keep judging new data against a stale yardstick for
+the whole re-solve flight. ``StreamState.recalibrate`` re-derives the
+preference from the current buffered window (a numpy subsample median /
+range-mid — the ``sampled_preferences`` estimate without any jax
+compile on the request path); the service invokes it whenever a drift
+re-solve is triggered, and the completed re-solve then installs its own
+window-derived preference as before. Numeric (calibrated) preferences
+are left alone — only string strategies float with the data.
 """
 from __future__ import annotations
 
@@ -25,6 +37,36 @@ from typing import Optional
 import numpy as np
 
 from repro.core.streaming import assign_nearest_exemplar
+
+#: subsample cap for window preference re-derivation — mirrors
+#: ``repro.solver.topk.PREF_SAMPLE``'s O(sample^2) constant-in-N cost.
+RECAL_SAMPLE = 1024
+
+
+def window_preference(points: np.ndarray, strategy: str, *,
+                      sample: int = RECAL_SAMPLE,
+                      seed: int = 0) -> Optional[float]:
+    """Median / range-mid of off-diagonal neg-sqeuclidean similarities
+    over (a subsample of) ``points`` — pure numpy, so the serving fast
+    path never pays an XLA compile for a re-calibration. Returns None
+    for strategies that do not derive from the data (numeric, random,
+    constant): those must not float between solves."""
+    if not isinstance(strategy, str) or strategy not in (
+            "median", "range_mid"):
+        return None
+    pts = np.asarray(points, np.float32)
+    if pts.ndim != 2 or pts.shape[0] < 2:
+        return None
+    if pts.shape[0] > sample:
+        sel = np.random.default_rng(seed).choice(
+            pts.shape[0], sample, replace=False)
+        pts = pts[sel]
+    sq = np.einsum("nd,nd->n", pts, pts)
+    s = 2.0 * (pts @ pts.T) - sq[:, None] - sq[None, :]
+    off = s[~np.eye(pts.shape[0], dtype=bool)]
+    if strategy == "median":
+        return float(np.median(off))
+    return float(0.5 * (off.min() + off.max()))
 
 
 @dataclasses.dataclass
@@ -75,6 +117,23 @@ class StreamState:
         self.drift_ewma = 0.0
         self.generation += 1
         self.resolve_pending = False
+
+    def recalibrate(self, strategy, window: Optional[int] = None) -> bool:
+        """Re-derive the drift-detection preference from the current
+        buffered window (the last ``window`` points, or the whole
+        buffer). Called by the service when a drift re-solve is
+        triggered, so the drift test tracks the data the re-solve will
+        actually see while it is in flight. Returns True if the
+        preference moved; no-op (False) for non-derived strategies or an
+        empty buffer. Caller holds ``self.lock``."""
+        if self.points is None:
+            return False
+        buf = self.points if window is None else self.points[-window:]
+        pref = window_preference(buf, strategy, seed=self.generation)
+        if pref is None or pref == self.preference:
+            return False
+        self.preference = pref
+        return True
 
     @property
     def ready(self) -> bool:

@@ -342,6 +342,12 @@ class ClusterService:
             # compile) — the most recent points win.
             window = max((b.n for b in self.router.buckets),
                          default=self._stream_max_points)
+            # re-calibrate the drift yardstick to the window the re-solve
+            # will see (st.lock is held by submit): while the solve is in
+            # flight, and for any batch the EWMA judges after it,
+            # staleness is measured against the data's *current* scale,
+            # not the last solve's
+            st.recalibrate(self.config.preference, window)
             buf = st.points[-window:].copy()
             self._enqueue(ClusterRequest(buf, len(buf), Future(),
                                          st.stream_id,

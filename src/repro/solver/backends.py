@@ -21,6 +21,9 @@ mr2d               2-D tile decomposition (lifts the M <= L*N ceiling)
 sharded_streaming  two-tier shard-local AP, O((N/S)^2) peak state
 coarsen            kd-partition -> batched local dense solves -> global
                    exemplar solve; the N=1e7-on-one-host route
+graph_affinity     Borůvka min-edge/contract affinity clustering over
+                   an EdgeList (or the built top-k graph); O(N*k) per
+                   round, ~log N rounds
 """
 from __future__ import annotations
 
@@ -71,23 +74,40 @@ register_backend(BackendSpec(
 def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
     """Compressed-layout Jacobi sweeps; O(L*N*k) state instead of
     O(L*N^2). Accepts raw points (tiled top-k build, the N x N matrix is
-    never materialized) or a similarity stack (row-wise compression).
-    ``cfg.sweep`` routes the loop itself: single-device, or row-sharded
-    over the workers mesh (``repro.solver.topk_sharded``)."""
+    never materialized), a similarity stack (row-wise compression), or an
+    ``EdgeList`` (already the compressed layout — dedup + pad, never
+    densify). ``cfg.sweep`` routes the loop itself: single-device, or
+    row-sharded over the workers mesh (``repro.solver.topk_sharded``)."""
     import jax
 
+    from repro.graph.edges import EdgeList
     from repro.solver import topk, topk_sharded
 
-    arr = jnp.asarray(data)
-    n = arr.shape[1] if arr.ndim == 3 else arr.shape[0]
-    k = topk.resolve_k(cfg.k, n)
-    if arr.ndim == 3:
-        s3k, idx = topk.compress_stack(arr, k)
+    if isinstance(data, EdgeList):
+        el = data.without_self_loops().deduplicated()
+        n = el.n_nodes
+        # an edge list brings its own sparsity: keep every stored edge
+        # unless cfg.k asks for a tighter (weight desc, dst asc) cut
+        k = (topk.resolve_k(cfg.k, n) if cfg.k is not None
+             else max(1, min(el.max_degree, n - 1)))
+        vals, idx_off = el.to_topk(k)
+        pref = el.edge_preferences(
+            cfg.preference if cfg.preference is not None else "median",
+            seed=cfg.seed)
+        s_rows, idx = topk._with_self_slot(
+            jnp.asarray(vals), jnp.asarray(idx_off), jnp.asarray(pref))
+        s3k = jnp.broadcast_to(s_rows[None], (cfg.levels, *s_rows.shape))
     else:
-        s3k, idx = topk.build_from_points(
-            arr, k, cfg.levels, metric=cfg.metric,
-            preference=cfg.preference,
-            key=jax.random.PRNGKey(cfg.seed), config=cfg)
+        arr = jnp.asarray(data)
+        n = arr.shape[1] if arr.ndim == 3 else arr.shape[0]
+        k = topk.resolve_k(cfg.k, n)
+        if arr.ndim == 3:
+            s3k, idx = topk.compress_stack(arr, k)
+        else:
+            s3k, idx = topk.build_from_points(
+                arr, k, cfg.levels, metric=cfg.metric,
+                preference=cfg.preference,
+                key=jax.random.PRNGKey(cfg.seed), config=cfg)
 
     sweep_mode = topk_sharded.resolve_sweep(cfg.sweep, n=n)
     if sweep_mode == "sharded":
@@ -118,9 +138,64 @@ def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
 
 register_backend(BackendSpec(
     name="dense_topk", run=_topk_run, accepts_points=True,
-    supports_early_stop=True,
+    accepts_edges=True, supports_early_stop=True,
     doc="top-k-per-row sparse similarities; O(L*N*k) state, exact at "
         "k=N-1"))
+
+
+# ------------------------------------------------------- graph affinity
+def _graph_run(data, cfg: SolveConfig) -> RawBackendResult:
+    """Borůvka-style affinity clustering (``repro.graph.affinity``).
+    Accepts an ``EdgeList`` natively; points go through the standard
+    top-k build first, a similarity stack through row compression — in
+    both cases the resulting directed top-k graph is canonicalized
+    (self-loops dropped, symmetrized, deduplicated) before contraction.
+    ``cfg.sweep`` routes the round loop single-device or row-sharded
+    over the workers mesh; the two are bit-identical."""
+    import jax
+
+    from repro.graph import affinity
+    from repro.graph.edges import EdgeList
+    from repro.solver import topk, topk_sharded
+
+    if isinstance(data, EdgeList):
+        el = data
+    else:
+        arr = jnp.asarray(data)
+        if arr.ndim == 3:
+            from repro.kernels.topk_similarity import topk_from_dense
+            n0 = arr.shape[-1]
+            vals, idx = topk_from_dense(arr[0], topk.resolve_k(cfg.k, n0))
+            el = EdgeList.from_topk(np.asarray(vals), np.asarray(idx))
+        else:
+            el = EdgeList.from_points(
+                arr, topk.resolve_k(cfg.k, arr.shape[0]),
+                config=cfg.replace(metric=cfg.metric))
+    el = el.canonical()
+    n = el.n_nodes
+    vals, idx = el.to_topk()
+
+    mesh = None
+    if topk_sharded.resolve_sweep(cfg.sweep, n=n) == "sharded":
+        from repro.solver.engine import _prepare_mesh
+        mesh, _ = _prepare_mesh("1d", cfg)
+        if mesh.shape["workers"] == 1:
+            mesh = None          # same 1-worker-detour rule as _topk_run
+
+    hist, r, conv, trace = affinity.run_graph_affinity(
+        vals, idx, levels=cfg.levels, max_rounds=cfg.graph_rounds,
+        target=cfg.graph_target_clusters or 1, mesh=mesh)
+    r = int(r)
+    return RawBackendResult(
+        exemplars=hist, n_sweeps=r, converged=bool(conv),
+        trace=np.asarray(trace)[:r], state=None)
+
+
+register_backend(BackendSpec(
+    name="graph_affinity", run=_graph_run, accepts_points=True,
+    accepts_edges=True, supports_early_stop=True,
+    doc="Borůvka min-edge/contract affinity clustering over an edge "
+        "list; O(N*k) per round, ~log N rounds"))
 
 
 # ------------------------------------------------------------- MR family

@@ -122,6 +122,21 @@ class SolveConfig:
     coarsen_global_dense_n: int = 4096
     coarsen_global_k: int = 64
 
+    # graph_affinity (repro.graph): Borůvka-style affinity clustering
+    # over an EdgeList (or the top-k graph built from points).
+    # graph_rounds bounds the contraction rounds (None -> ceil(log2 N)+1,
+    # enough to reach a single component); graph_target_clusters stops
+    # the contraction once the cluster count is at or below it (None ->
+    # run to connected components). Both are validated at solve() entry.
+    graph_rounds: Optional[int] = None
+    graph_target_clusters: Optional[int] = None
+    # "graph" runs a cheap Borůvka pass over the built top-k edges and
+    # seeds the HAP preference vector with it (graph-cluster leaders
+    # keep the base preference, members pay a weight-span penalty).
+    # Point input only; rejected for backends that cannot take a
+    # per-point preference array (and for graph_affinity itself).
+    preseed: str = "off"                # off|graph
+
     # sharded_streaming
     shard_size: int = 512
     pref_scale: float = 1.0

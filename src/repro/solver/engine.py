@@ -76,6 +76,21 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
         raise ValueError(
             f"SolveConfig.exchange must be one of {EXCHANGE_MODES}; "
             f"got {cfg.exchange!r}")
+    if cfg.graph_rounds is not None and cfg.graph_rounds < 1:
+        raise ValueError(
+            "SolveConfig.graph_rounds must be >= 1 "
+            f"(got {cfg.graph_rounds}); None lets the backend run "
+            "ceil(log2 N) + 1 contraction rounds")
+    if (cfg.graph_target_clusters is not None
+            and cfg.graph_target_clusters < 1):
+        raise ValueError(
+            "SolveConfig.graph_target_clusters must be >= 1 "
+            f"(got {cfg.graph_target_clusters}); None runs the "
+            "contraction to connected components")
+    if cfg.preseed not in ("off", "graph"):
+        raise ValueError(
+            "SolveConfig.preseed must be 'off' or 'graph'; "
+            f"got {cfg.preseed!r}")
     if cfg.backend == "coarsen":
         from repro.solver.coarsen import check_coarsen_config
         check_coarsen_config(cfg)
@@ -83,14 +98,18 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
 
 # ------------------------------------------------------------------ input
 def _normalize_input(data, cfg: SolveConfig):
-    """-> (points or None, similarity stack or None, original N)."""
+    """-> (points, similarity stack, edge list, original N) — exactly one
+    of the first three is non-None."""
+    from repro.graph.edges import EdgeList
+    if isinstance(data, EdgeList):
+        return None, None, data, data.n_nodes
     arr = np.asarray(data) if not isinstance(data, jnp.ndarray) else data
     if arr.ndim == 3:
         if arr.shape[1] != arr.shape[2]:
             raise ValueError(f"3-D input must be (L, N, N); got {arr.shape}")
         if cfg.input_kind == "points":
             raise ValueError("input_kind='points' requires a 2-D (N, d) array")
-        return None, jnp.asarray(arr), arr.shape[1]
+        return None, jnp.asarray(arr), None, arr.shape[1]
     if arr.ndim != 2:
         raise ValueError(f"expected 2-D or 3-D input; got ndim={arr.ndim}")
     kind = cfg.input_kind
@@ -99,8 +118,22 @@ def _normalize_input(data, cfg: SolveConfig):
     if kind == "similarity":
         if arr.shape[0] != arr.shape[1]:
             raise ValueError(f"similarity matrix must be square; {arr.shape}")
-        return None, stack_levels(jnp.asarray(arr), cfg.levels), arr.shape[0]
-    return np.asarray(arr, np.float32), None, arr.shape[0]
+        return (None, stack_levels(jnp.asarray(arr), cfg.levels), None,
+                arr.shape[0])
+    return np.asarray(arr, np.float32), None, None, arr.shape[0]
+
+
+def _densify_edges(el, cfg: SolveConfig):
+    """EdgeList -> (L, N, N) stack for backends without native edge
+    support: missing entries take the inert fill (strictly below every
+    stored weight), the diagonal takes ``cfg.preference`` resolved over
+    the stored edge weights (``None`` means "median" here — the dense
+    points path's untouched-diagonal-0 convention has no meaning for a
+    graph whose weights live at an arbitrary magnitude)."""
+    pref = cfg.preference if cfg.preference is not None else "median"
+    s = set_preferences(jnp.asarray(el.to_dense()),
+                        jnp.asarray(el.edge_preferences(pref, seed=cfg.seed)))
+    return stack_levels(s, cfg.levels)
 
 
 def _build_similarity(x: np.ndarray, cfg: SolveConfig, backend: str):
@@ -113,10 +146,21 @@ def _build_similarity(x: np.ndarray, cfg: SolveConfig, backend: str):
     else:
         s = pairwise_similarity(xj, metric=cfg.metric)
     pref = cfg.preference
-    if pref is None:
+    if pref is None and cfg.preseed != "graph":
         return stack_levels(s, cfg.levels)
     if isinstance(pref, str):
         pref = make_preferences(s, pref, key=jax.random.PRNGKey(cfg.seed))
+    if cfg.preseed == "graph":
+        # seed the preference vector from a cheap Borůvka pass over the
+        # matrix's top-k graph (dense path: the matrix already exists, so
+        # compressing it here costs no extra build)
+        from repro.graph.affinity import preseed_preferences
+        from repro.kernels.topk_similarity import topk_from_dense
+        from repro.solver.topk import resolve_k
+        vals, idx = topk_from_dense(s, resolve_k(cfg.k, s.shape[0]))
+        pref = preseed_preferences(
+            vals, idx, 0.0 if pref is None else pref,
+            target=cfg.graph_target_clusters, max_rounds=cfg.graph_rounds)
     s = set_preferences(s, pref)
     return stack_levels(s, cfg.levels)
 
@@ -178,7 +222,9 @@ def solve(data, config: Optional[SolveConfig] = None,
     """Cluster ``data`` hierarchically with the configured backend.
 
     ``data``: (N, d) points, (N, N) similarity matrix (diagonal =
-    preferences, caller-owned), or (L, N, N) per-level similarity stack.
+    preferences, caller-owned), (L, N, N) per-level similarity stack, or
+    a ``repro.graph.EdgeList`` (routed natively to edge-capable backends,
+    densified with inert fill for the rest).
     Keyword overrides patch ``config`` field-by-field:
     ``solve(x, backend="mr2d", max_iterations=80)``.
     """
@@ -186,7 +232,7 @@ def solve(data, config: Optional[SolveConfig] = None,
     if overrides:
         cfg = cfg.replace(**overrides)
 
-    x, s3, n = _normalize_input(data, cfg)
+    x, s3, el, n = _normalize_input(data, cfg)
     validate_config(cfg, n)
 
     backend = cfg.backend
@@ -194,29 +240,49 @@ def solve(data, config: Optional[SolveConfig] = None,
         backend = auto_select(
             n, cfg.levels, n_devices=len(jax.devices()),
             has_points=x is not None, platform=jax.default_backend(),
-            cfg=cfg)
+            cfg=cfg, has_edges=el is not None)
     spec = get_backend(backend)
 
     if spec.needs_points and x is None:
+        hint = (" — an EdgeList carries no point coordinates"
+                if el is not None else "")
         raise ValueError(
             f"backend {backend!r} clusters raw points (it never builds the "
-            "global similarity matrix); pass an (N, d) array")
+            f"global similarity matrix); pass an (N, d) array{hint}")
     if cfg.stop == "converged" and not spec.supports_early_stop:
         raise ValueError(
             f"backend {backend!r} runs a fixed distributed sweep schedule "
             "and does not support stop='converged'; use stop='fixed' or a "
             "dense backend")
+    if cfg.preseed == "graph":
+        if backend == "graph_affinity":
+            raise ValueError(
+                "preseed='graph' seeds a HAP backend's preferences with a "
+                "graph pass; backend='graph_affinity' IS the graph pass — "
+                "drop one of the two")
+        if x is None:
+            raise ValueError(
+                "preseed='graph' re-derives preferences from the top-k "
+                "graph the engine builds; it requires (N, d) point input")
+        if spec.needs_points:
+            raise ValueError(
+                f"backend {backend!r} does not consume a per-point "
+                "preference array, which is what preseed='graph' "
+                "produces; use a dense or dense_topk backend")
 
-    if spec.needs_points:
+    if el is not None and spec.accepts_edges:
+        raw = spec.run(el, cfg)
+    elif spec.needs_points:
         raw = spec.run(x, cfg)
     elif spec.accepts_points and x is not None and s3 is None:
-        # points-capable backend (dense_topk): hand it the raw points so
-        # its own (compressed) similarity build runs and the dense N x N
-        # matrix is never materialized here
+        # points-capable backend (dense_topk, graph_affinity): hand it the
+        # raw points so its own (compressed) similarity build runs and the
+        # dense N x N matrix is never materialized here
         raw = spec.run(x, cfg)
     else:
         if s3 is None:
-            s3 = _build_similarity(x, cfg, backend)
+            s3 = (_densify_edges(el, cfg) if el is not None
+                  else _build_similarity(x, cfg, backend))
         if spec.mesh_kind:
             mesh, multiple = _prepare_mesh(spec, cfg)
             s3, _ = pad_similarity(s3, multiple)

@@ -34,6 +34,10 @@ class BackendSpec:
     #: a similarity stack; the engine hands it points when it has them so
     #: the dense (N, N) matrix is never materialized on its account
     accepts_points: bool = False
+    #: backend consumes a ``repro.graph.EdgeList`` natively (compressed
+    #: edge layout, no densification); backends without this flag get
+    #: graph input through the engine's densify routing instead
+    accepts_edges: bool = False
     #: backend honors cfg.stop == "converged" (lax.while_loop early exit)
     supports_early_stop: bool = False
     #: one-line description for docs/CLI listings
@@ -66,7 +70,8 @@ def list_backends() -> Dict[str, BackendSpec]:
 
 
 def auto_select(n: int, levels: int, *, n_devices: int, has_points: bool,
-                platform: str, cfg: SolveConfig) -> str:
+                platform: str, cfg: SolveConfig,
+                has_edges: bool = False) -> str:
     """Pick a backend from problem size and hardware (the local-vs-global
     regime split of Xia et al.):
 
@@ -87,7 +92,13 @@ def auto_select(n: int, levels: int, *, n_devices: int, has_points: bool,
     ``stop="converged"`` restricts the choice to the dense family
     (``dense_topk`` and ``coarsen`` included) — the streaming and
     distributed backends run fixed schedules and would reject it.
+
+    An ``EdgeList`` input routes straight to ``graph_affinity`` — the
+    one backend that consumes the edge structure natively; every other
+    backend would pay a densify (or lossy top-k truncation) detour.
     """
+    if has_edges:
+        return "graph_affinity"
     early = cfg.stop == "converged"
     if has_points and n >= COARSEN_THRESHOLD:
         from repro.solver.coarsen import coarsen_pref_ok

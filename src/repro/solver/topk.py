@@ -164,6 +164,13 @@ def build_from_points(x: jnp.ndarray, k: int, levels: int, *,
                                    jax.random.fold_in(key, 0x5eed))
     else:
         pref = topk_preferences(vals, preference, key=key)
+    if getattr(cfg, "preseed", "off") == "graph":
+        # seed from a Borůvka pass over the edges just built — the graph
+        # pass reuses (vals, idx), so preseeding never doubles the build
+        from repro.graph.affinity import preseed_preferences
+        pref = preseed_preferences(
+            vals, idx, pref, target=cfg.graph_target_clusters,
+            max_rounds=cfg.graph_rounds)
     s_rows, idx_full = _with_self_slot(vals, idx, pref)
     return jnp.broadcast_to(s_rows[None], (levels, *s_rows.shape)), idx_full
 

@@ -1,0 +1,123 @@
+"""Subprocess helper: graph_affinity shard parity on 8 forced host
+devices — the ISSUE-9 acceptance check.
+
+A duplicate-heavy graph (weights drawn from a 3-value set, so nearly
+every per-cluster selection is a tie) is clustered three ways:
+
+* the jitted single-device loop,
+* the shard_map row-block loop over an 8-worker mesh (pmax weight /
+  pmin candidate exchange),
+* a hand-rolled numpy Borůvka oracle with the same (max weight, min
+  destination-leader) tie-break.
+
+All three must agree **bit-for-bit** on every level, plus rounds /
+converged / trace between the two jax paths. With ``--preseed-n N``
+also runs the ``preseed="graph"`` end-to-end solve at that N (the
+ISSUE-9 N=1e5 gate in the nightly). Exits nonzero on any mismatch.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.graph import EdgeList
+from repro.graph.affinity import run_graph_affinity
+from repro.launch.mesh import make_worker_mesh
+from repro.solver import solve
+
+N, DEG, LEVELS = 1000, 12, 3
+
+
+def duplicate_heavy_graph(n: int, deg: int, seed: int = 4) -> EdgeList:
+    rng = np.random.default_rng(seed)
+    m = deg * n
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = rng.choice(np.asarray([1.0, 2.0, 3.0], np.float32), m)
+    return EdgeList(src, dst, w, n_nodes=n).canonical()
+
+
+def oracle(el: EdgeList, target: int = 1):
+    """Numpy Borůvka with the backend's exact selection contract."""
+    from repro.core.assignments import flatten_pointers
+    src, dst, w = el.src, el.dst, el.weight
+    n = el.n_nodes
+    ids = np.arange(n)
+    labels = ids.copy()
+    while (labels == ids).sum() > target:
+        ls, ld = labels[src], labels[dst]
+        act = ls != ld
+        if not act.any():
+            break
+        best_w = np.full(n, -np.inf)
+        np.maximum.at(best_w, ls[act], w[act])
+        ach = act & (w == best_w[ls])
+        best_t = np.full(n, n)
+        np.minimum.at(best_t, ls[ach], ld[ach])
+        parent = ids.copy()
+        has = best_t < n
+        parent[has] = best_t[has]
+        two = (parent[parent] == ids) & (ids < parent)
+        parent[two] = ids[two]
+        labels = flatten_pointers(parent)[labels]
+    return labels
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preseed-n", type=int, default=0)
+    opts = ap.parse_args()
+
+    el = duplicate_heavy_graph(N, DEG)
+    vals, idx = el.to_topk()
+    mesh = make_worker_mesh()
+    assert mesh.shape["workers"] == 8, mesh.shape
+    ok = True
+
+    for target in (1, 16):
+        h1, r1, c1, t1 = run_graph_affinity(
+            vals, idx, levels=LEVELS, target=target)
+        h8, r8, c8, t8 = run_graph_affinity(
+            vals, idx, levels=LEVELS, target=target, mesh=mesh)
+        bit = (np.array_equal(np.asarray(h1), np.asarray(h8))
+               and int(r1) == int(r8) and bool(c1) == bool(c8)
+               and np.array_equal(np.asarray(t1), np.asarray(t8)))
+        print(f"[target={target}] sharded x 8 workers: bit_exact={bit} "
+              f"(rounds {int(r1)} vs {int(r8)})")
+        ok &= bit
+        want = oracle(el, target=target)
+        orc = np.array_equal(np.asarray(h8)[-1], want)   # coarsest = final
+        print(f"[target={target}] vs numpy oracle: labels_equal={orc}")
+        ok &= orc
+
+    # front door: sharded sweep equals single end-to-end
+    ref = solve(el, backend="graph_affinity", levels=2, sweep="single")
+    res = solve(el, backend="graph_affinity", levels=2, sweep="sharded")
+    same = (np.array_equal(res.exemplars, ref.exemplars)
+            and res.n_sweeps == ref.n_sweeps
+            and res.converged == ref.converged)
+    print(f"solve(sweep='sharded') x 8 workers: end_to_end_equal={same}")
+    ok &= same
+
+    if opts.preseed_n:
+        n = opts.preseed_n
+        rng = np.random.default_rng(0)
+        centers = rng.standard_normal((32, 4)).astype(np.float32) * 6.0
+        x = (centers[rng.integers(0, 32, n)]
+             + 0.2 * rng.standard_normal((n, 4)).astype(np.float32))
+        res = solve(x, backend="dense_topk", preseed="graph", k=16,
+                    levels=1, max_iterations=30, sweep="single")
+        good = res.n == n and res.n_clusters[0] >= 1
+        print(f"preseed='graph' end-to-end at N={n}: ok={good} "
+              f"(clusters={int(res.n_clusters[0])}, "
+              f"sweeps={res.n_sweeps})")
+        ok &= good
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

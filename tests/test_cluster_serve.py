@@ -404,3 +404,64 @@ def test_overflow_coarsen_disabled_with_none():
     res = svc.solve_sync(_blobs(400, seed=13)[0])
     assert res.solve.backend == "dense_topk"
     assert svc.snapshot()["overflow_coarsen_solves"] == 0
+
+
+# ------------------------------------------------- preference recalibration
+def test_window_preference_matches_full_median():
+    from repro.serve.cluster.incremental import window_preference
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(40, 2)).astype(np.float32)
+    sq = np.einsum("nd,nd->n", pts, pts)
+    s = 2.0 * pts @ pts.T - sq[:, None] - sq[None, :]
+    off = s[~np.eye(40, dtype=bool)]
+    assert window_preference(pts, "median") == pytest.approx(
+        float(np.median(off)))
+    assert window_preference(pts, "range_mid") == pytest.approx(
+        float(0.5 * (off.min() + off.max())))
+    # non-derived strategies must not float between solves
+    assert window_preference(pts, -5.0) is None
+    assert window_preference(pts, "constant") is None
+    assert window_preference(pts[:1], "median") is None
+
+
+def test_stream_recalibrate_tracks_scale_shift():
+    from repro.serve.cluster.incremental import StreamState
+    st = StreamState("s")
+    rng = np.random.default_rng(1)
+    assert not st.recalibrate("median")            # empty buffer no-op
+    st.absorb(rng.normal(size=(50, 2)).astype(np.float32) * 0.3)
+    st.preference = -1e9                           # stale yardstick
+    assert st.recalibrate("median")
+    tight = st.preference
+    assert tight > -1e9
+    # wider data -> similarities spread -> preference drops again
+    st.absorb(rng.normal(size=(200, 2)).astype(np.float32) * 10.0)
+    assert st.recalibrate("median", window=200)
+    assert st.preference < tight
+    # numeric strategy: never recalibrated
+    st.preference = -7.0
+    assert not st.recalibrate(-7.0)
+    assert st.preference == -7.0
+
+
+def test_drift_resolve_recalibrates_preference_in_flight():
+    """The drift trigger re-derives the stream preference from the
+    buffered window *before* the background re-solve lands, so the
+    drift test tracks the shifted data while the solve is in flight."""
+    svc = ClusterService(config=CFG, buckets=[(128, 2, 2)],
+                         auto_bucket=False, drift_threshold=0.25,
+                         drift_halflife=16)
+    svc.warmup()
+    rng = np.random.default_rng(5)
+    near = rng.normal(size=(60, 2)).astype(np.float32) * 0.3
+    svc.solve_sync(near, stream="s")
+    st = svc._streams["s"]
+    pref0 = st.preference
+    far = (rng.normal(size=(40, 2)) * 0.3 + 80.0).astype(np.float32)
+    r = svc.solve_sync(far, stream="s")
+    assert r.assign.resolve_triggered
+    # recalibrated from the near+far window immediately at trigger time:
+    # the mixed window spans two regions, so the median similarity is
+    # far more negative than the tight near-only preference
+    assert st.preference < pref0
+    svc.drain()

@@ -1,0 +1,327 @@
+"""Graph subsystem: EdgeList validation/round-trips and the
+``graph_affinity`` Borůvka backend against a hand-rolled numpy oracle.
+
+The oracle (NetworkX-free) implements the exact selection contract the
+jitted backend claims — per-cluster best edge = (max weight, min
+destination-leader id), mutual-pair hooking resolved to the smaller
+node id, pointer jumping to fixed point — so label comparisons are
+exact equality, tie-breaks included, on duplicate-heavy weights.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.assignments import flatten_pointers
+from repro.graph import EdgeList
+from repro.graph.edges import inert_fill
+from repro.solver import SolveConfig, solve
+from repro.solver.topk import build_from_points
+
+
+# ------------------------------------------------------------ numpy oracle
+def boruvka_oracle(el: EdgeList, target: int = 1, max_rounds=None):
+    """Reference Borůvka affinity clustering over a canonical edge list.
+    Returns (label history list, n_rounds, converged)."""
+    src, dst, w = el.src, el.dst, el.weight
+    n = el.n_nodes
+    ids = np.arange(n)
+    labels = ids.copy()
+    hist, rounds = [], 0
+    while True:
+        if (labels == ids).sum() <= target:
+            return hist, rounds, True
+        ls, ld = labels[src], labels[dst]
+        act = ls != ld
+        if not act.any():
+            return hist, rounds, True
+        if max_rounds is not None and rounds >= max_rounds:
+            return hist, rounds, False
+        best_w = np.full(n, -np.inf)
+        np.maximum.at(best_w, ls[act], w[act])
+        ach = act & (w == best_w[ls])
+        best_t = np.full(n, n)
+        np.minimum.at(best_t, ls[ach], ld[ach])
+        parent = ids.copy()
+        has = best_t < n
+        parent[has] = best_t[has]
+        two = (parent[parent] == ids) & (ids < parent)
+        parent[two] = ids[two]
+        labels = flatten_pointers(parent)[labels]
+        hist.append(labels.copy())
+        rounds += 1
+
+
+def duplicate_heavy_graph(n=120, seed=3, weights=(1.0, 2.0, 3.0)):
+    """Random symmetric graph whose weights come from a 3-value set —
+    nearly every selection is a tie, so any tie-break divergence between
+    backend and oracle shows up immediately."""
+    rng = np.random.default_rng(seed)
+    m = 6 * n
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = rng.choice(np.asarray(weights, np.float32), m)
+    return EdgeList(src, dst, w).canonical()
+
+
+# --------------------------------------------------------- EdgeList basics
+def test_edgelist_validation():
+    with pytest.raises(ValueError, match="1-D"):
+        EdgeList(np.zeros((2, 2), np.int32), np.zeros(2, np.int32),
+                 np.zeros(2))
+    with pytest.raises(ValueError, match="equal length"):
+        EdgeList(np.zeros(3, np.int32), np.zeros(2, np.int32),
+                 np.zeros(2))
+    with pytest.raises(ValueError, match="integer"):
+        EdgeList(np.zeros(2), np.zeros(2, np.int32), np.zeros(2))
+    with pytest.raises(ValueError, match="finite"):
+        EdgeList(np.zeros(1, np.int32), np.ones(1, np.int32),
+                 np.asarray([np.nan]))
+    with pytest.raises(ValueError, match=r"lie in \[0, 4\)"):
+        EdgeList(np.asarray([0], np.int32), np.asarray([7], np.int32),
+                 np.ones(1), n_nodes=4)
+    # n_nodes inference
+    el = EdgeList(np.asarray([0, 5], np.int32), np.asarray([5, 0], np.int32),
+                  np.ones(2))
+    assert el.n_nodes == 6 and el.n_edges == 2
+
+
+def test_dedup_keeps_max_weight_and_symmetrize():
+    src = np.asarray([0, 0, 0, 1], np.int32)
+    dst = np.asarray([1, 1, 0, 2], np.int32)
+    w = np.asarray([1.0, 5.0, 9.0, 2.0], np.float32)
+    el = EdgeList(src, dst, w, n_nodes=3)
+    d = el.without_self_loops().deduplicated()
+    assert d.n_edges == 2                          # (0,1)x2 -> 1, (1,2)
+    assert d.weight[(d.src == 0) & (d.dst == 1)][0] == 5.0
+    sym = el.canonical()
+    # every edge reciprocated with equal weight
+    fwd = {(s, t): wt for s, t, wt in zip(sym.src, sym.dst, sym.weight)}
+    assert fwd == {(0, 1): 5.0, (1, 0): 5.0, (1, 2): 2.0, (2, 1): 2.0}
+
+
+def test_topk_roundtrip_bit_parity():
+    """build -> from_topk -> to_topk reproduces the build layout
+    bit-for-bit (values AND column order), duplicates included."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 3)).astype(np.float32)
+    x[32:] = x[:32]                                # exact duplicate points
+    s3k, idx_full = build_from_points(x, 7, 1)
+    vals = np.asarray(s3k[0][:, 1:])               # strip self slot
+    idx = np.asarray(idx_full[:, 1:])
+    el = EdgeList.from_topk(vals, idx)
+    v2, i2 = el.to_topk(7)
+    assert np.array_equal(v2, vals)
+    assert np.array_equal(i2, idx)
+
+
+def test_to_topk_pads_empty_rows_inert():
+    """Isolated nodes (no out-edges) pad with self-pointing slots whose
+    fill sits strictly below every stored weight."""
+    el = EdgeList(np.asarray([0], np.int32), np.asarray([1], np.int32),
+                  np.asarray([-3.0], np.float32), n_nodes=4)
+    vals, idx = el.to_topk(2)
+    fill = inert_fill(el.weight)
+    assert fill < -3.0
+    assert vals[0, 0] == -3.0 and idx[0, 0] == 1
+    assert np.all(vals[2] == fill) and np.all(idx[2] == 2)
+    assert vals[0, 1] == fill and idx[0, 1] == 0   # short row padded
+    # dense layout mirrors the fill convention
+    s = el.to_dense()
+    assert s[0, 1] == -3.0 and s[2, 3] == fill
+
+
+def test_to_topk_truncates_by_weight_then_dst():
+    el = EdgeList(np.asarray([0, 0, 0], np.int32),
+                  np.asarray([3, 1, 2], np.int32),
+                  np.asarray([5.0, 5.0, 7.0], np.float32), n_nodes=4)
+    vals, idx = el.to_topk(2)
+    # keep (7.0 -> 2) and the tie at 5.0 won by smaller dst (1)
+    assert list(idx[0]) == [1, 2] and list(vals[0]) == [5.0, 7.0]
+
+
+# ------------------------------------------------------ backend vs oracle
+def test_graph_affinity_matches_oracle_duplicate_heavy():
+    el = duplicate_heavy_graph()
+    hist, rounds, conv = boruvka_oracle(el, target=1)
+    res = solve(el, backend="graph_affinity", levels=1)
+    assert np.array_equal(res.exemplars[0], hist[-1])
+    assert res.converged
+    assert rounds <= res.n_sweeps <= rounds + 1
+    # trace counts relabelings per round
+    assert res.trace[0] > 0
+
+
+@pytest.mark.parametrize("target", [2, 7, 25])
+def test_graph_affinity_target_clusters(target):
+    el = duplicate_heavy_graph(n=90, seed=11)
+    hist, rounds, conv = boruvka_oracle(el, target=target)
+    want = hist[-1] if hist else np.arange(el.n_nodes)
+    res = solve(el, backend="graph_affinity", levels=1,
+                graph_target_clusters=target)
+    assert np.array_equal(res.exemplars[0], want)
+    assert res.n_clusters[0] == len(np.unique(want))
+
+
+def test_graph_affinity_round_budget():
+    el = duplicate_heavy_graph(n=80, seed=5)
+    hist, rounds, conv = boruvka_oracle(el, target=1, max_rounds=1)
+    res = solve(el, backend="graph_affinity", levels=1, graph_rounds=1)
+    assert res.n_sweeps == 1
+    assert np.array_equal(res.exemplars[0], hist[0])
+    full = boruvka_oracle(el, target=1)[1]
+    if full > 1:
+        assert not res.converged                   # budget-stopped
+
+
+def test_graph_affinity_hierarchy_levels_nest():
+    el = duplicate_heavy_graph(n=100, seed=7)
+    hist, rounds, _ = boruvka_oracle(el, target=1)
+    levels = 3
+    res = solve(el, backend="graph_affinity", levels=levels)
+    # level l = snapshot levels-1-l rounds before the stop
+    snaps = [np.arange(el.n_nodes)] * levels + hist
+    for l in range(levels):
+        assert np.array_equal(res.exemplars[l],
+                              snaps[len(snaps) - levels + l])
+    # nesting: a level-l cluster never splits at level l+1
+    for l in range(levels - 1):
+        fine, coarse = res.labels[l], res.labels[l + 1]
+        for c in np.unique(fine):
+            assert len(np.unique(coarse[fine == c])) == 1
+
+
+def test_graph_affinity_disconnected_components_and_isolates():
+    # two 2-cliques plus an isolated node: contraction stops at the
+    # components, isolate stays a singleton
+    el = EdgeList(np.asarray([0, 1, 2, 3], np.int32),
+                  np.asarray([1, 0, 3, 2], np.int32),
+                  np.ones(4, np.float32), n_nodes=5).canonical()
+    res = solve(el, backend="graph_affinity", levels=1)
+    assert res.converged
+    assert np.array_equal(res.exemplars[0], [0, 0, 2, 2, 4])
+
+
+def test_empty_graph_all_singletons():
+    el = EdgeList(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                  np.zeros(0, np.float32), n_nodes=6)
+    res = solve(el, backend="graph_affinity", levels=2)
+    assert np.array_equal(res.exemplars, np.tile(np.arange(6), (2, 1)))
+    assert res.n_clusters.tolist() == [6, 6]
+
+
+# --------------------------------------------------------- engine routing
+def test_auto_routes_edges_to_graph_affinity():
+    el = duplicate_heavy_graph(n=40, seed=1)
+    res = solve(el)
+    assert res.backend == "graph_affinity"
+
+
+def test_points_input_to_graph_backend():
+    rng = np.random.default_rng(2)
+    x = np.concatenate([rng.normal(0, 0.3, (30, 2)),
+                        rng.normal(8, 0.3, (30, 2))]).astype(np.float32)
+    res = solve(x, backend="graph_affinity", levels=1, k=6,
+                graph_target_clusters=2)
+    assert res.n_clusters[0] == 2
+    # the two blobs land in different clusters
+    lab = res.labels[0]
+    assert len(set(lab[:30])) == 1 and len(set(lab[30:])) == 1
+    assert lab[0] != lab[-1]
+
+
+def test_edges_densify_into_dense_backends():
+    el = duplicate_heavy_graph(n=24, seed=9)
+    res = solve(el, backend="dense_parallel", levels=1, max_iterations=30)
+    assert res.n == el.n_nodes and res.labels.shape == (1, 24)
+    res2 = solve(el, backend="mr1d_stats", levels=2, max_iterations=20)
+    assert res2.n == el.n_nodes
+
+
+def test_edges_native_into_dense_topk():
+    el = duplicate_heavy_graph(n=24, seed=9)
+    res = solve(el, backend="dense_topk", levels=1, max_iterations=30)
+    assert res.n == 24 and res.backend == "dense_topk"
+    # similarity-stack consumption for graph_affinity (compress routing)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((20, 2)).astype(np.float32)
+    from repro.core.similarity import pairwise_similarity
+    s = np.asarray(pairwise_similarity(x))
+    res3 = solve(s[None], backend="graph_affinity", levels=1,
+                 graph_target_clusters=4)
+    assert res3.n_clusters[0] <= 4
+
+
+def test_edges_rejected_by_points_only_backends():
+    el = duplicate_heavy_graph(n=16, seed=0)
+    for backend in ("sharded_streaming", "coarsen"):
+        with pytest.raises(ValueError, match="EdgeList carries no point"):
+            solve(el, backend=backend)
+
+
+# ----------------------------------------------------- config validation
+def test_graph_config_validation():
+    el = duplicate_heavy_graph(n=16, seed=0)
+    with pytest.raises(ValueError, match="graph_rounds"):
+        solve(el, graph_rounds=0)
+    with pytest.raises(ValueError, match="graph_target_clusters"):
+        solve(el, graph_target_clusters=0)
+    with pytest.raises(ValueError, match="preseed"):
+        solve(el, preseed="bogus")
+
+
+def test_preseed_validation():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((32, 2)).astype(np.float32)
+    el = duplicate_heavy_graph(n=16, seed=0)
+    with pytest.raises(ValueError, match="IS the graph pass"):
+        solve(x, backend="graph_affinity", preseed="graph")
+    with pytest.raises(ValueError, match="point input"):
+        solve(el, backend="dense_topk", preseed="graph")
+    with pytest.raises(ValueError, match="preference array"):
+        solve(x, backend="sharded_streaming", preseed="graph")
+
+
+def test_preseed_graph_end_to_end():
+    rng = np.random.default_rng(4)
+    x = np.concatenate([rng.normal(0, 0.3, (40, 2)),
+                        rng.normal(6, 0.3, (40, 2))]).astype(np.float32)
+    for backend in ("dense_topk", "dense_parallel"):
+        res = solve(x, backend=backend, preseed="graph", levels=1, k=8,
+                    max_iterations=60)
+        assert res.n == 80 and res.n_clusters[0] >= 1
+        assert res.labels[0].min() >= 0
+
+
+# ----------------------------------------------------------- preferences
+def test_edge_preferences_strategies():
+    el = EdgeList(np.asarray([0, 1], np.int32), np.asarray([1, 0], np.int32),
+                  np.asarray([-2.0, -6.0], np.float32))
+    assert np.all(el.edge_preferences("median") == -4.0)
+    assert np.all(el.edge_preferences("range_mid") == -4.0)
+    assert np.all(el.edge_preferences(1.5) == 1.5)
+    assert np.array_equal(el.edge_preferences(np.asarray([1.0, 2.0])),
+                          [1.0, 2.0])
+    with pytest.raises(ValueError, match="unknown preference"):
+        el.edge_preferences("bogus")
+
+
+# ------------------------------------------------------------- slow tier
+HELPER = os.path.join(os.path.dirname(__file__), "helpers",
+                      "graph_dist_check.py")
+
+
+@pytest.mark.slow
+def test_graph_affinity_8_worker_parity():
+    """Sharded contraction bit-matches single device and the numpy
+    oracle on 8 forced host devices (subprocess so the device-count
+    override never leaks into this session)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, HELPER], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr

@@ -2,12 +2,19 @@
 
 Asserts that
 
-* every registered solver backend name, and
-* every ``SolveConfig`` field
+* every registered solver backend name has a **table row** in
+  ``docs/solver.md`` (a ``| `name` `` first-column code span — a stray
+  prose mention no longer counts, closing the silent gap where a
+  backend was "documented" by an incidental word match);
+* every ``SolveConfig`` field likewise has a table row in
+  ``docs/solver.md``;
+* the graph subsystem surface (``EdgeList``, the ``graph_affinity``
+  backend, every ``graph_*`` config field, and ``preseed``) is covered
+  in ``docs/graph.md``;
+* every ``ClusterService`` constructor knob appears in
+  ``docs/serving.md``.
 
-appears in ``docs/solver.md``, and that every ``ClusterService``
-constructor knob appears in ``docs/serving.md``. Run from the repo
-root (CI runs it in the tier-1 job):
+Run from the repo root (CI runs it in the tier-1 job):
 
     PYTHONPATH=src python tools/check_docs.py
 
@@ -30,20 +37,48 @@ def _words(path: pathlib.Path) -> set:
     return set(re.findall(r"[A-Za-z_][A-Za-z0-9_]*", path.read_text()))
 
 
+def _table_row_names(path: pathlib.Path) -> set:
+    """First-column code-span identifiers of every markdown table row —
+    the anchor an entry must have to count as *documented*, not merely
+    mentioned."""
+    return set(re.findall(r"^\|\s*`([A-Za-z0-9_.]+)`",
+                          path.read_text(), re.MULTILINE))
+
+
 def check_solver_doc() -> list:
     from repro.solver import list_backends
     from repro.solver.config import SolveConfig
 
     doc = REPO / "docs" / "solver.md"
-    words = _words(doc)
+    rows = _table_row_names(doc)
     missing = []
     for name in sorted(list_backends()):
-        if name not in words:
-            missing.append(f"{doc.name}: backend {name!r} undocumented")
-    for f in dataclasses.fields(SolveConfig):
-        if f.name not in words:
+        if name not in rows:
             missing.append(
-                f"{doc.name}: SolveConfig.{f.name} undocumented")
+                f"{doc.name}: backend {name!r} has no `| `{name}`` table "
+                "row (backend table or config reference)")
+    for f in dataclasses.fields(SolveConfig):
+        if f.name not in rows:
+            missing.append(
+                f"{doc.name}: SolveConfig.{f.name} has no table row")
+    return missing
+
+
+def check_graph_doc() -> list:
+    from repro.solver.config import SolveConfig
+
+    doc = REPO / "docs" / "graph.md"
+    if not doc.exists():
+        return ["docs/graph.md missing — the graph subsystem "
+                "(EdgeList + graph_affinity) must be documented"]
+    words = _words(doc)
+    missing = []
+    required = ["EdgeList", "graph_affinity", "preseed"] + [
+        f.name for f in dataclasses.fields(SolveConfig)
+        if f.name.startswith("graph_")]
+    for name in required:
+        if name not in words:
+            missing.append(f"{doc.name}: {name!r} undocumented")
     return missing
 
 
@@ -64,14 +99,14 @@ def check_serving_doc() -> list:
 
 
 def main() -> int:
-    missing = check_solver_doc() + check_serving_doc()
+    missing = check_solver_doc() + check_graph_doc() + check_serving_doc()
     if missing:
         print("docs lint FAILED — undocumented public surface:")
         for m in missing:
             print(f"  - {m}")
         return 1
-    print("docs lint OK: every backend, SolveConfig field, and "
-          "ClusterService knob is documented")
+    print("docs lint OK: every backend, SolveConfig field, graph surface, "
+          "and ClusterService knob is documented")
     return 0
 
 
