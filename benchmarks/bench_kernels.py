@@ -192,6 +192,37 @@ def run_coarsen_solve(n: int, reps: int) -> list:
              "bytes": 3 * part * part * 8 * 4}]
 
 
+def run_checkpointed_solve(n: int, reps: int) -> list:
+    """Checkpointed dense_topk solve row: the segmented while-loop
+    program plus a host state snapshot per segment boundary. Timed after
+    a warmup call, so the row gates the steady-state checkpointing
+    overhead (segment re-dispatch, device->host state pull, atomic tmp+
+    rename save) — the price of crash-resumable solves staying small."""
+    import tempfile
+
+    from repro.data import gaussian_blobs
+    from repro.solver import solve
+
+    k, iters, every = 16, 12, 4
+    x, _ = gaussian_blobs(n=n, k=8, seed=0, spread=0.4)
+    best = float("inf")
+    with tempfile.TemporaryDirectory() as d:
+        kw = dict(backend="dense_topk", k=k, stop="fixed",
+                  max_iterations=iters, damping=0.7, preference="median",
+                  checkpoint_every=every, checkpoint_dir=d)
+        solve(x, **kw)                          # warmup + compile
+        for _ in range(reps):
+            t0 = time.time()
+            solve(x, **kw)
+            best = min(best, time.time() - t0)
+    segments = (iters + every - 1) // every
+    return [{"name": f"checkpointed_solve_n{n}", "us": best * 1e6,
+             # sweep arithmetic as in the plain solve; traffic adds one
+             # full compressed-state round trip per segment boundary
+             "flops": 2 * 4 * iters * n * (k + 1),
+             "bytes": segments * 6 * n * (k + 1) * 4}]
+
+
 def run_topk_build(tier: str) -> list:
     """Top-k similarity build tier: the perf target of the fused/sharded
     build PR. Times each build backend on the same blob suite so the
@@ -278,9 +309,11 @@ def main(argv=None):
         # regression gate (it only arms on rows above its --min-us floor)
         rows = run(n=256, reps=3, sweep_n=192, sweep_iters=2)
         rows += run_coarsen_solve(n=1024, reps=3)
+        rows += run_checkpointed_solve(n=256, reps=3)
     else:
         rows = run()
         rows += run_coarsen_solve(n=4096, reps=3)
+        rows += run_checkpointed_solve(n=2048, reps=3)
     build_tier = args.topk_build_tier or "smoke"
     build_rows = [] if build_tier == "skip" else run_topk_build(build_tier)
     if build_tier == "smoke":

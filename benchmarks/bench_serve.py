@@ -8,6 +8,15 @@ the configured bucket/batch settings.
 
     PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--json P]
     PYTHONPATH=src python benchmarks/bench_serve.py --multiworker
+    PYTHONPATH=src python benchmarks/bench_serve.py --chaos
+
+``--chaos`` runs the worker-failure recovery bench instead: the same
+Poisson load through a multi-worker service while a seeded
+``FaultInjector`` kills one worker's launches mid-traffic, then a clean
+follow-up load. The emitted ``serve_chaos`` row records baseline /
+under-chaos / recovered p99 plus the recovery counters (worker_deaths,
+retried_batches, requeued_requests, resurrections) — the trajectory
+plot shows recovery cost, not just steady-state latency.
 
 ``--multiworker`` runs the scale-out comparison instead: the same load
 ladder through (a) the legacy single-worker configuration — one worker,
@@ -22,7 +31,10 @@ explicit sheds with bounded p99 instead of unbounded latency growth.
 Emits ``BENCH_serve.json`` (the nightly workflow uploads it; rows are
 named ``serve_load_<rps>`` plus a ``serve_warmup`` compile row, or
 ``serve_{sw,mw}_load_<rps>`` + ``serve_scaleout_summary`` +
-``serve_mw_overload`` under ``--multiworker``).
+``serve_mw_overload`` under ``--multiworker``). ``--chaos`` writes its
+``serve_chaos`` row to ``BENCH_serve_chaos.json`` instead, so the
+nightly can run the load sweep and the chaos bench back to back without
+one record clobbering the other.
 """
 from __future__ import annotations
 
@@ -58,6 +70,15 @@ MW_SMOKE = {"buckets": [(64, 2)], "batch": 4,
             "min_requests": 8, "max_iterations": 60,
             "workers": 2, "sources": 2, "max_wait_ms": 20.0,
             "overload_queue": 4, "slo_floor_ms": 600.0}
+
+#: chaos-recovery tiers: one load level, offered three times (baseline,
+#: under injected worker kills, recovered)
+CHAOS_FULL = {"buckets": [(64, 2)], "batch": 4, "rps": 40.0,
+              "requests": 80, "max_iterations": 60, "workers": 4,
+              "kills": 3, "cooldown_s": 0.2, "deadline_ms": 2000.0}
+CHAOS_SMOKE = {"buckets": [(64, 2)], "batch": 4, "rps": 30.0,
+               "requests": 30, "max_iterations": 60, "workers": 2,
+               "kills": 1, "cooldown_s": 0.1, "deadline_ms": 2000.0}
 
 
 def run_sweep(argv_tier, args) -> int:
@@ -255,6 +276,75 @@ def run_multiworker(args) -> int:
     return 0
 
 
+def run_chaos(args) -> int:
+    """Worker-failure recovery bench: baseline load, load under seeded
+    worker kills (every future must still resolve successfully), clean
+    recovered load — one ``serve_chaos`` row with all three p99s and the
+    recovery counters."""
+    from repro.runtime import faultinject
+    from repro.runtime.faultinject import FaultInjector, Rule
+
+    tier = CHAOS_SMOKE if args.smoke else CHAOS_FULL
+    cfg = SolveConfig(stop="converged",
+                      max_iterations=tier["max_iterations"],
+                      damping=0.6, levels=2, preference="median",
+                      seed=args.seed)
+    svc = ClusterService(
+        config=cfg,
+        buckets=[(n, d, tier["batch"]) for n, d in tier["buckets"]],
+        auto_bucket=False, workers=tier["workers"],
+        max_wait_ms=1.0, max_retries=3,
+        worker_cooldown_s=tier["cooldown_s"], retry_backoff_ms=2.0)
+    delta = svc.warmup()
+    print(f"[serve:chaos] warmup: {delta['misses']} compiles "
+          f"{delta['compile_seconds']:.2f}s ({tier['workers']} workers)")
+
+    def load(seed):
+        return run_load(
+            svc, synthetic_requests(tier["requests"], tier["buckets"],
+                                    seed=seed),
+            rps=tier["rps"], seed=seed, deadline_ms=tier["deadline_ms"])
+
+    baseline = load(args.seed + 1)
+    inj = FaultInjector(seed=7).add(
+        Rule("serve.launch", nth=0, times=tier["kills"],
+             match={"worker": 1}))
+    with faultinject.active(inj):
+        chaos = load(args.seed + 2)
+    recovered = load(args.seed + 3)
+    s = svc.stats
+    print(f"[serve:chaos] p99 baseline {baseline.p99_ms:.1f} ms -> "
+          f"under-chaos {chaos.p99_ms:.1f} ms -> "
+          f"recovered {recovered.p99_ms:.1f} ms | "
+          f"errors {baseline.n_errors}/{chaos.n_errors}/"
+          f"{recovered.n_errors} | deaths={s.worker_deaths} "
+          f"retried={s.retried_batches} requeued={s.requeued_requests} "
+          f"resurrections={s.resurrections}")
+    if chaos.n_errors or recovered.n_errors:
+        print("[serve:chaos] FAIL: futures failed — recovery is supposed "
+              "to absorb worker kills")
+        return 1
+    rows = [{"name": "serve_chaos",
+             "baseline_p99_ms": baseline.p99_ms,
+             "chaos_p99_ms": chaos.p99_ms,
+             "recovered_p99_ms": recovered.p99_ms,
+             "n_requests": 3 * tier["requests"],
+             "n_errors": (baseline.n_errors + chaos.n_errors
+                          + recovered.n_errors),
+             "injected_faults": len(inj.events),
+             "worker_deaths": s.worker_deaths,
+             "retried_batches": s.retried_batches,
+             "requeued_requests": s.requeued_requests,
+             "resurrections": s.resurrections,
+             "workers": tier["workers"], "rps": tier["rps"]}]
+    # own record name: the nightly runs the load sweep and the chaos
+    # bench back to back, and this emit must not clobber BENCH_serve.json
+    emit("serve_chaos", rows,
+         meta={"smoke": args.smoke, "chaos": True,
+               "workers": tier["workers"], "seed": 7}, out_dir=".")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -262,6 +352,9 @@ def main(argv=None) -> int:
     ap.add_argument("--multiworker", action="store_true",
                     help="scale-out comparison: single-worker legacy vs "
                          "multi-worker SLO dispatch + 2x-overload run")
+    ap.add_argument("--chaos", action="store_true",
+                    help="worker-failure recovery bench: load under "
+                         "seeded worker kills + recovered p99")
     ap.add_argument("--stream-frac", type=float, default=0.5,
                     help="fraction of requests riding one stream's "
                          "incremental fast path (classic sweep only)")
@@ -269,13 +362,16 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, help="override output path")
     args = ap.parse_args(argv)
 
-    if args.multiworker:
+    if args.chaos:
+        ret = run_chaos(args)
+    elif args.multiworker:
         ret = run_multiworker(args)
     else:
         ret = run_sweep(SMOKE if args.smoke else FULL, args)
     if args.json:
         import shutil
-        shutil.move("BENCH_serve.json", args.json)
+        src = "BENCH_serve_chaos.json" if args.chaos else "BENCH_serve.json"
+        shutil.move(src, args.json)
         print(f"[serve] moved record to {args.json}")
     return ret
 

@@ -1,6 +1,9 @@
 from repro.runtime.compression import compress_tree_grads, topk_compress
 from repro.runtime.fault import FaultPolicy, run_with_restarts
 from repro.runtime.elastic import reshard_state
+from repro.runtime import degrade, faultinject
+from repro.runtime.faultinject import FaultInjector, InjectedFault, Rule
 
 __all__ = ["compress_tree_grads", "topk_compress", "FaultPolicy",
-           "run_with_restarts", "reshard_state"]
+           "run_with_restarts", "reshard_state", "degrade", "faultinject",
+           "FaultInjector", "InjectedFault", "Rule"]

@@ -1,0 +1,54 @@
+"""Degradation event log — graceful fallback bookkeeping.
+
+When an accelerated path raises (a Pallas kernel that the platform
+rejects, a fused build that dies on an edge shape), the engine falls
+back to the reference implementation and records the event here instead
+of failing the solve. The log is bounded (oldest dropped) and mirrored
+to ``logging.getLogger("repro.degrade")`` so operators see it without
+importing anything.
+
+Sites that degrade today: the ``dense_fused`` backend (falls back to
+``dense_parallel``), the Pallas similarity build inside the engine, and
+the fused top-k build (falls back to the reference scan). Tests drive
+them deterministically through :mod:`repro.runtime.faultinject`.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import time
+
+_LOG = logging.getLogger("repro.degrade")
+_MAX_EVENTS = 256
+
+_lock = threading.Lock()
+_events: list[dict] = []
+
+
+def record(site: str, fallback: str, error: BaseException) -> dict:
+    """Log one degradation: ``site`` raised ``error``; we are continuing
+    on ``fallback``. Returns the event dict."""
+    event = {
+        "site": site,
+        "fallback": fallback,
+        "error": f"{type(error).__name__}: {error}",
+        "time": time.time(),
+    }
+    with _lock:
+        _events.append(event)
+        if len(_events) > _MAX_EVENTS:
+            del _events[: len(_events) - _MAX_EVENTS]
+    _LOG.warning("degraded %s -> %s after %s", site, fallback,
+                 event["error"])
+    return event
+
+
+def events() -> list[dict]:
+    """Snapshot of recorded degradation events (oldest first)."""
+    with _lock:
+        return list(_events)
+
+
+def clear() -> None:
+    with _lock:
+        _events.clear()

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 log = logging.getLogger("repro.fault")
 
@@ -40,13 +40,15 @@ class FaultPolicy:
 def run_with_restarts(
     run_fn: Callable[[Any], Any],
     restore_fn: Callable[[], Any],
-    policy: FaultPolicy = FaultPolicy(),
+    policy: Optional[FaultPolicy] = None,
 ) -> Any:
     """Drive ``run_fn(state)`` restarting from ``restore_fn()`` on failure.
 
     ``run_fn`` must raise to signal an unrecoverable worker error and is
     expected to checkpoint internally every ``policy.checkpoint_every``.
     """
+    if policy is None:
+        policy = FaultPolicy()
     attempts = 0
     while True:
         try:

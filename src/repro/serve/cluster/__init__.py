@@ -18,7 +18,7 @@ from repro.serve.cluster.buckets import (
 from repro.serve.cluster.compile_cache import CacheStats, CompileCache
 from repro.serve.cluster.dispatch import (
     ClusterRequest, DeadlineExceededError, ServiceOverloadedError,
-    WorkerShard,
+    WorkerFailedError, WorkerShard,
 )
 from repro.serve.cluster.incremental import AssignResult, StreamState
 from repro.serve.cluster.service import (
@@ -30,7 +30,7 @@ __all__ = [
     "Bucket", "BucketRouter", "batch_ladder", "ladder_fit",
     "CacheStats", "CompileCache",
     "ClusterRequest", "DeadlineExceededError", "ServiceOverloadedError",
-    "WorkerShard",
+    "WorkerFailedError", "WorkerShard",
     "AssignResult", "StreamState", "ClusterResponse", "ClusterService",
     "ServiceStats", "fit_buckets", "mine_trace",
 ]

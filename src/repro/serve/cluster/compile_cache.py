@@ -23,6 +23,7 @@ import threading
 import time
 from typing import Any, Optional
 
+from repro.runtime import faultinject
 from repro.serve.cluster.buckets import Bucket, batch_ladder
 from repro.solver.compiled import BatchedDenseSolver, config_static_key
 from repro.solver.config import SolveConfig
@@ -60,6 +61,7 @@ class CompileCache:
                 return solver
             # compile inside the lock: concurrent first requests for one
             # bucket must not both pay (and double-count) the compile
+            faultinject.fire("serve.compile", bucket=bucket.key)
             self.stats.misses += 1
             t0 = time.perf_counter()
             solver = BatchedDenseSolver(

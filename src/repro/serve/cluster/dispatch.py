@@ -48,6 +48,13 @@ class ServiceOverloadedError(RuntimeError):
     """Admission control shed the request: every worker queue is full."""
 
 
+class WorkerFailedError(RuntimeError):
+    """The request exhausted its retries against failing workers (or no
+    healthy worker remained to retry on). Every future the service hands
+    out resolves — with this, a deadline error, or a result — so callers
+    never hang on a dead worker."""
+
+
 @dataclasses.dataclass
 class ClusterRequest:
     """One queued clustering request (the unit every queue holds).
@@ -57,7 +64,10 @@ class ClusterRequest:
     breach it, and drops the request with ``DeadlineExceededError`` if it
     expires while still queued. ``internal`` marks drift-triggered
     re-solves — they have no caller waiting, bypass admission control,
-    and never carry deadlines.
+    and never carry deadlines. ``attempts`` counts launch attempts that
+    died under this request (worker failures) — the retry policy caps it
+    at ``ClusterService.max_retries`` before failing the future with
+    ``WorkerFailedError``.
     """
     points: np.ndarray
     n: int
@@ -66,6 +76,7 @@ class ClusterRequest:
     submitted: float
     deadline: Optional[float] = None
     internal: bool = False
+    attempts: int = 0
 
     def expired(self, now: Optional[float] = None) -> bool:
         if self.deadline is None:
@@ -104,6 +115,11 @@ class WorkerShard:
         self._est_s: dict[tuple, float] = {}   # bucket key -> launch EWMA
         self.thread: Optional[threading.Thread] = None
         self.running = False
+        # failure-recovery state: a launch failure marks the shard
+        # unhealthy; the service stops routing to it, redistributes its
+        # queue, and resurrects it (fresh compile cache) after a cooldown
+        self.healthy = True
+        self.failed_at: Optional[float] = None
 
     # ------------------------------------------------------------ enqueue
     def try_admit(self, req: ClusterRequest, key: Optional[tuple], *,

@@ -91,7 +91,10 @@ class StreamState:
         # drift estimate has the same memory whatever the batch sizes
         self.decay = 0.5 ** (1.0 / max(int(drift_halflife), 1))
         self.max_points = int(max_points)
-        self.lock = threading.Lock()
+        # RLock: the service may fail a drift re-solve *inside* the
+        # enqueue that scheduled it (no healthy worker) — the release of
+        # resolve_pending then re-enters this lock on the same thread
+        self.lock = threading.RLock()
         self.exemplar_points: Optional[np.ndarray] = None   # (K, d)
         self.preference: float = 0.0
         self.drift_ewma: float = 0.0

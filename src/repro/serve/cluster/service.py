@@ -61,9 +61,11 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.serve.cluster.buckets import Bucket, BucketRouter, ladder_fit
+from repro.runtime import faultinject
+from repro.serve.cluster.compile_cache import CompileCache
 from repro.serve.cluster.dispatch import (
     ClusterRequest, DeadlineExceededError, ServiceOverloadedError,
-    WorkerShard, close_at, pop_batch, steal_batch,
+    WorkerFailedError, WorkerShard, close_at, pop_batch, steal_batch,
 )
 from repro.serve.cluster.incremental import AssignResult, StreamState
 from repro.solver.compiled import slice_request
@@ -108,10 +110,23 @@ class ServiceStats:
     deadline_rejects: int = 0          # deadline already expired at submit
     deadline_drops: int = 0            # deadline expired while queued
     stolen_batches: int = 0            # batches run by a non-owning worker
+    worker_deaths: int = 0             # launch failures that marked a
+                                       # worker unhealthy (pump deaths too)
+    retried_batches: int = 0           # failed batches re-admitted to a
+                                       # surviving worker
+    requeued_requests: int = 0         # queued requests moved off a dead
+                                       # worker's shard
+    resurrections: int = 0             # unhealthy workers brought back
+                                       # with a fresh compile cache
     cache: dict = dataclasses.field(default_factory=dict)
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
+
+
+#: ceiling on the per-attempt retry backoff — exponential growth must
+#: never hold a pump thread longer than this per failed batch
+RETRY_BACKOFF_CAP_S = 0.1
 
 
 class ClusterService:
@@ -126,7 +141,9 @@ class ClusterService:
                  overflow_k: int = 64,
                  overflow_coarsen_n: Optional[int] = 200_000,
                  workers: int = 1, max_queue: Optional[int] = None,
-                 batch_ladder: bool = True):
+                 batch_ladder: bool = True, max_retries: int = 2,
+                 worker_cooldown_s: float = 5.0,
+                 retry_backoff_ms: float = 5.0):
         cfg = config or SolveConfig(stop="converged", max_iterations=100)
         # fail at construction, not mid-traffic: the batched dense path
         # ignores sparse-topk k, so a config carrying it is a mistake
@@ -160,9 +177,19 @@ class ClusterService:
         self.overflow_coarsen_n = (None if overflow_coarsen_n is None
                                    else int(overflow_coarsen_n))
         self.batch_ladder = bool(batch_ladder)
+        # failure recovery: a launch failure marks its worker unhealthy;
+        # its riders retry on survivors (capped exponential backoff, up
+        # to max_retries attempts), its queue redistributes, and after
+        # worker_cooldown_s the worker resurrects with a fresh warmed
+        # compile cache. Every future still resolves — the worst case is
+        # WorkerFailedError, never a hang.
+        self.max_retries = int(max_retries)
+        self.worker_cooldown_s = float(worker_cooldown_s)
+        self.retry_backoff_ms = float(retry_backoff_ms)
         self._drift_threshold = drift_threshold
         self._drift_halflife = drift_halflife
         self._stream_max_points = stream_max_points
+        self._started = False
 
         self._lock = threading.Lock()
         self._streams: dict[str, StreamState] = {}
@@ -394,14 +421,40 @@ class ClusterService:
         self._dispatch(req, bucket.key)
 
     def _dispatch(self, req: ClusterRequest, key: Optional[tuple]) -> None:
-        """Least-loaded worker admission with round-robin tie-break;
-        internal re-solves bypass the bound (no caller is waiting on
-        them, and they are capped at one in flight per stream). When
-        every shard is full the request is shed — an explicit, immediate
-        rejection instead of unbounded queue growth."""
+        """Least-loaded *healthy* worker admission with round-robin
+        tie-break; internal re-solves bypass the bound (no caller is
+        waiting on them, and they are capped at one in flight per
+        stream). When every shard is full the request is shed — an
+        explicit, immediate rejection instead of unbounded queue growth.
+        With every worker unhealthy, resurrection is attempted inline
+        (cooldown-gated first, then forced — better a resurrect compile
+        than a guaranteed failure); only if none can come back does the
+        request fail with ``WorkerFailedError``."""
+        if self._started and not any(
+                w.thread is not None and w.thread.is_alive()
+                for w in self.workers):
+            # started service whose pump threads have all died: queueing
+            # would hang the caller forever — fail fast instead
+            self._fail_request(req, WorkerFailedError(
+                "service pump threads have died; call start() again "
+                "after fixing the fault (see stats.worker_deaths)"))
+            return
         with self._lock:
             rr = self._rr = (self._rr + 1) % len(self.workers)
-        order = sorted(self.workers,
+        healthy = [w for w in self.workers if w.healthy]
+        if not healthy:
+            for w in self.workers:
+                if self._maybe_resurrect(w):
+                    break
+            healthy = [w for w in self.workers if w.healthy]
+        if not healthy and self._force_resurrect() is not None:
+            healthy = [w for w in self.workers if w.healthy]
+        if not healthy:
+            self._fail_request(req, WorkerFailedError(
+                f"all {len(self.workers)} workers are unhealthy and "
+                "none could be resurrected"))
+            return
+        order = sorted(healthy,
                        key=lambda w: (w.depth(),
                                       (w.wid - rr) % len(self.workers)))
         if req.internal:
@@ -416,22 +469,213 @@ class ClusterService:
             f"all {len(self.workers)} worker queues full "
             f"(max_queue={self.workers[0].max_queue}); request shed"))
 
+    # ------------------------------------------------------- recovery
+    def _fail_request(self, r: ClusterRequest, exc: BaseException) -> None:
+        """Terminal failure for one request: release the stream's
+        resolve_pending flag when an internal re-solve dies (or the
+        stream could never schedule another), then resolve the future."""
+        if r.internal and r.stream is not None:
+            with self._lock:
+                st = self._streams.get(r.stream)
+            if st is not None:
+                with st.lock:
+                    st.resolve_pending = False
+        if not r.future.done():
+            r.future.set_exception(exc)
+
+    def _maybe_resurrect(self, w: WorkerShard) -> bool:
+        """True when ``w`` is (or just became) healthy. Resurrection is
+        cooldown-gated: a worker that just died gets ``worker_cooldown_s``
+        of quiet before the service pays a fresh warm-up compile for it."""
+        if w.healthy:
+            return True
+        with w.work:
+            failed_at = w.failed_at
+        if (failed_at is not None
+                and time.perf_counter() - failed_at < self.worker_cooldown_s):
+            return False
+        return self._resurrect(w)
+
+    def _force_resurrect(self) -> Optional[WorkerShard]:
+        """Cooldown-ignoring resurrection sweep — the no-healthy-worker
+        escape hatch (a compile beats a guaranteed WorkerFailedError)."""
+        for w in self.workers:
+            if not w.healthy and self._resurrect(w):
+                return w
+        return None
+
+    def _resurrect(self, w: WorkerShard) -> bool:
+        """Bring an unhealthy worker back with a *fresh* compile cache,
+        fully warmed before it takes traffic (whatever poisoned the old
+        cache — a wedged executable, a monkeypatched handle, a device in
+        a bad state — is discarded wholesale). A warm-up failure leaves
+        the worker unhealthy and restarts its cooldown."""
+        cache = CompileCache(device=w.device)
+        try:
+            cache.warm(self.router.buckets, self.config,
+                       ladder=self.batch_ladder)
+        except Exception:
+            with w.work:
+                w.failed_at = time.perf_counter()
+            return False
+        with w.work:
+            w.cache = cache
+            w.healthy = True
+            w.failed_at = None
+            w.work.notify_all()
+        with self._lock:
+            self.stats.resurrections += 1
+        return True
+
+    def _redistribute(self, dead: WorkerShard) -> int:
+        """Drain a dead worker's shard onto the least-loaded healthy
+        survivor (force-admitted: these requests already passed admission
+        once). With no survivor, fail each — never strand a future on a
+        queue nothing will pump."""
+        moved = 0
+        while True:
+            grabbed = pop_batch(dead)
+            if grabbed is None:
+                break
+            bucket, reqs = grabbed
+            key = None if bucket is None else bucket.key
+            survivors = [s for s in self.workers
+                         if s.healthy and s is not dead]
+            target = (min(survivors, key=lambda s: s.depth())
+                      if survivors else None)
+            for r in reqs:
+                if target is None:
+                    self._fail_request(r, WorkerFailedError(
+                        f"worker {dead.wid} died and no healthy worker "
+                        "remains to take its queue"))
+                else:
+                    target.try_admit(r, key, force=True)
+                    moved += 1
+        if moved:
+            with self._lock:
+                self.stats.requeued_requests += moved
+        return moved
+
+    def _on_worker_failure(self, w: WorkerShard, bucket: Optional[Bucket],
+                           live, exc: BaseException) -> None:
+        """A launch on ``w`` raised: mark it unhealthy, move its queue to
+        survivors, and retry the failed riders with capped exponential
+        backoff — bounded by each rider's deadline and ``max_retries``.
+        Every rider's future resolves down one of these paths."""
+        first = False
+        with w.work:
+            if w.healthy:
+                w.healthy = False
+                first = True
+            w.failed_at = time.perf_counter()
+        if first:
+            with self._lock:
+                self.stats.worker_deaths += 1
+        self._redistribute(w)
+        retry, delay = [], 0.0
+        now = time.perf_counter()
+        backoff_s = self.retry_backoff_ms / 1e3
+        for r in live:
+            r.attempts += 1
+            survivors = [s for s in self.workers if s.healthy]
+            if r.attempts > self.max_retries or not survivors:
+                self._fail_request(r, WorkerFailedError(
+                    f"worker {w.wid} failed after {r.attempts} "
+                    f"attempt(s): {exc!r}"))
+                continue
+            d = min(backoff_s * (2 ** (r.attempts - 1)),
+                    RETRY_BACKOFF_CAP_S)
+            if r.deadline is not None and now + d > r.deadline:
+                # the retry itself would breach the SLO — deadline
+                # semantics win over retry semantics
+                self._drop_expired(r)
+                continue
+            retry.append(r)
+            delay = max(delay, d)
+        if not retry:
+            return
+        time.sleep(delay)
+        survivors = [s for s in self.workers if s.healthy]
+        if not survivors:
+            for r in retry:
+                self._fail_request(r, WorkerFailedError(
+                    f"worker {w.wid} failed and no healthy worker "
+                    "remains to retry on"))
+            return
+        with self._lock:
+            self.stats.retried_batches += 1
+        target = min(survivors, key=lambda s: s.depth())
+        key = None if bucket is None else bucket.key
+        for r in retry:
+            target.try_admit(r, key, force=True)
+
+    def _pump_died(self, w: WorkerShard, exc: BaseException) -> None:
+        """Watchdog: a scheduler thread died outside the per-batch guard.
+        Mark the worker down, move its queue; when no other live pump
+        remains, fail every pending future — a started service must never
+        leave callers blocked on futures nothing will resolve."""
+        with w.work:
+            w.healthy = False
+            w.running = False
+            w.failed_at = time.perf_counter()
+        with self._lock:
+            self.stats.worker_deaths += 1
+        others = [o for o in self.workers
+                  if o is not w and o.running and o.thread is not None
+                  and o.thread.is_alive()]
+        try:
+            self._redistribute(w)
+        except BaseException:  # noqa: BLE001 — the queue layer itself died
+            others = []
+        if not others:
+            self._fail_all_pending(WorkerFailedError(
+                f"service pump died: {exc!r}"))
+
+    def _fail_all_pending(self, exc: BaseException) -> None:
+        """Sweep every shard's queues directly (no pop/dispatch helpers —
+        this path must survive a broken queue layer) and fail each
+        request. The terminal guarantee: no future outlives its pumps."""
+        for w in self.workers:
+            with w.work:
+                reqs = [r for q in w.queues.values() for r in q]
+                reqs.extend(w.overflow)
+                w.queues.clear()
+                w.overflow.clear()
+                w.queued = 0
+            for r in reqs:
+                self._fail_request(r, exc)
+
     # ----------------------------------------------------------- pumping
     def drain(self) -> int:
         """Process queued micro-batches on the caller's thread until
         every worker's queue is empty (drift re-solves enqueued mid-drain
-        included). Returns the number of batches executed."""
+        included). Returns the number of batches executed.
+
+        Unhealthy workers are not pumped: their queues redistribute to
+        survivors (or the worker resurrects first, cooldown permitting).
+        An exception escaping the drain itself — recovery is exercised
+        *inside* ``_run_batch`` — fails every pending future before
+        re-raising, so a crashed pump never strands a caller."""
         batches = 0
-        while True:
-            progressed = False
-            for w in self.workers:
-                grabbed = pop_batch(w)
-                if grabbed is not None:
-                    self._run_batch(w, *grabbed)
-                    batches += 1
-                    progressed = True
-            if not progressed:
-                return batches
+        try:
+            while True:
+                progressed = False
+                for w in self.workers:
+                    if not w.healthy:
+                        if not self._maybe_resurrect(w):
+                            progressed |= self._redistribute(w) > 0
+                            continue
+                    grabbed = pop_batch(w)
+                    if grabbed is not None:
+                        self._run_batch(w, *grabbed)
+                        batches += 1
+                        progressed = True
+                if not progressed:
+                    return batches
+        except BaseException as exc:
+            self._fail_all_pending(WorkerFailedError(
+                f"drain() died mid-pump: {exc!r}"))
+            raise
 
     def drain_worker(self, wid: int) -> int:
         """Pump a single worker on the caller's thread — its own shard
@@ -454,17 +698,19 @@ class ClusterService:
         """Background scheduling: one gather/solve thread per worker,
         closing batches under the SLO rules (deadline slack or the
         ``max_wait_ms`` cap, whichever is tighter)."""
+        self._started = True
         for w in self.workers:
             with w.work:
                 if w.running:
                     continue
                 w.running = True
             w.thread = threading.Thread(
-                target=self._worker_loop, args=(w,),
+                target=self._worker_main, args=(w,),
                 name=f"cluster-serve-{w.wid}", daemon=True)
             w.thread.start()
 
     def stop(self, timeout: float = 10.0) -> None:
+        self._started = False
         for w in self.workers:
             with w.work:
                 w.running = False
@@ -474,8 +720,28 @@ class ClusterService:
                 w.thread.join(timeout)
                 w.thread = None
 
+    def _worker_main(self, w: WorkerShard) -> None:
+        """Thread entry: the loop body already survives per-batch solver
+        failures (``_run_batch`` routes them through recovery); this
+        outer guard is the watchdog for everything else — a bug in the
+        scheduler itself must fail pending futures, not strand them."""
+        try:
+            self._worker_loop(w)
+        except BaseException as exc:  # noqa: BLE001 — watchdog by design
+            self._pump_died(w, exc)
+
     def _worker_loop(self, w: WorkerShard) -> None:
         while True:
+            if not w.healthy:
+                # down worker: hand the queue to survivors, then sit out
+                # the cooldown before resurrecting with a fresh cache
+                self._redistribute(w)
+                with w.work:
+                    if not w.running:
+                        return
+                if not self._maybe_resurrect(w):
+                    time.sleep(0.02)
+                    continue
             now = time.perf_counter()
             with w.work:
                 t = close_at(w, now, self.max_wait_s)
@@ -544,6 +810,8 @@ class ClusterService:
             return
         t0 = time.perf_counter()
         try:
+            faultinject.fire("serve.launch", worker=w.wid,
+                             bucket=bucket.key)
             solver, vb = self._solver_for(w, bucket, len(live))
             pts = np.zeros((vb.batch, bucket.n, bucket.d), np.float32)
             n_real = np.full((vb.batch,), 2, np.int32)  # inert filler
@@ -552,17 +820,11 @@ class ClusterService:
                 n_real[i] = r.n
             raw = solver.run(pts, n_real)
         except Exception as exc:  # one bad batch must not wedge the queue
-            for r in live:
-                if r.internal and r.stream is not None:
-                    # a failed drift re-solve must release the pending
-                    # flag, or the stream can never schedule another one
-                    with self._lock:
-                        st = self._streams.get(r.stream)
-                    if st is not None:
-                        with st.lock:
-                            st.resolve_pending = False
-                if not r.future.done():
-                    r.future.set_exception(exc)
+            # a launch failure is a *worker* failure: mark the shard
+            # down, move its queue, retry the riders on survivors (each
+            # future still resolves — result, deadline, or
+            # WorkerFailedError after max_retries)
+            self._on_worker_failure(w, bucket, live, exc)
             return
         dt_s = time.perf_counter() - t0
         w.note_launch(bucket.key, dt_s)
@@ -644,14 +906,11 @@ class ClusterService:
                     input_kind="points")
             result = solve(req.points, cfg)
         except Exception as exc:
-            if req.internal and req.stream is not None:
-                with self._lock:
-                    st = self._streams.get(req.stream)
-                if st is not None:
-                    with st.lock:
-                        st.resolve_pending = False
-            if not req.future.done():
-                req.future.set_exception(exc)
+            # overflow failures are *content* failures (one request, the
+            # real solver, its real error) — fail the rider, keep the
+            # worker: retrying the same bad input on a survivor would
+            # just fail twice
+            self._fail_request(req, exc)
             return
         dt = (time.perf_counter() - t0) * 1e3
         with self._lock:
@@ -713,6 +972,7 @@ class ClusterService:
         for w in self.workers:
             c = w.cache.snapshot()
             per_worker.append({"worker": w.wid, "queued": w.depth(),
+                               "healthy": w.healthy,
                                "compiled": len(w.cache), "cache": c})
             for k in agg:
                 agg[k] += c[k]

@@ -118,7 +118,13 @@ def _topk_run(data, cfg: SolveConfig) -> RawBackendResult:
             # shard nothing (the build had the same regression) — the
             # single-device loop is the same arithmetic, minus the detour
             sweep_mode = "single"
-    if sweep_mode == "sharded":
+    if cfg.checkpoint_every > 0 or cfg.resume_from:
+        from repro.solver import checkpointing
+        state, e, n_sweeps, conv, trace = \
+            checkpointing.run_topk_checkpointed(
+                s3k, idx, cfg,
+                mesh=mesh if sweep_mode == "sharded" else None)
+    elif sweep_mode == "sharded":
         state, e, n_sweeps, conv, trace = topk_sharded.run_topk_sharded(
             s3k, idx, mesh, max_iterations=cfg.max_iterations,
             damping=cfg.damping, kappa=cfg.kappa, s_mode=cfg.s_mode,

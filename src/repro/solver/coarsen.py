@@ -167,6 +167,7 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
 
     Lazy imports of the engine keep the module cycle-free (the engine
     imports the registry, which imports this backend's adapter)."""
+    from repro.runtime import faultinject
     from repro.sharding.partitioning import kd_cells
     from repro.solver.engine import solve
 
@@ -175,6 +176,36 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
     n = x.shape[0]
     if n < 2:
         return _trivial(n, cfg.levels)
+
+    # ---- checkpoint/resume plumbing: the kd partition is deterministic,
+    # so stage artifacts only need the *products* (exemplar prefix, then
+    # the global solution); everything else is recomputed on resume.
+    ckpt_every = cfg.checkpoint_every
+    ckpt_dir = cfg.checkpoint_dir if ckpt_every > 0 else None
+    local_art = global_art = None
+    if ckpt_dir or cfg.resume_from:
+        import os
+
+        from repro.solver import checkpointing as ckp
+        meta = ckp.coarsen_meta(n, x.shape[1], cfg)
+        if cfg.resume_from:
+            ckp.check_meta(cfg.resume_from, meta)
+            local_art = ckp.load_stage(
+                cfg.resume_from, "local",
+                {"ex_idx": 0, "masses": 0, "groups_done": 0,
+                 "local_sweeps": 0, "local_conv": 0})
+            global_art = ckp.load_stage(
+                cfg.resume_from, "global",
+                {"exemplars": 0, "n_sweeps": 0, "converged": 0})
+        if ckpt_dir:
+            if not cfg.resume_from or os.path.abspath(cfg.resume_from) \
+                    != os.path.abspath(ckpt_dir):
+                ckp.reset_dir(ckpt_dir)
+            ckp.write_meta(ckpt_dir, meta)
+        # the sub-solves (batched locals, the global stage) must not
+        # inherit the checkpoint knobs: they'd collide on the same dir
+        cfg = cfg.replace(checkpoint_every=0, checkpoint_dir=None,
+                          resume_from=None)
 
     cells = kd_cells(x, cfg.partition_size)
 
@@ -203,7 +234,27 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
     ex_idx: list[np.ndarray] = []      # global point index per exemplar
     masses: list[np.ndarray] = []      # points each exemplar speaks for
     local_sweeps, local_converged = 0, True
-    for lo in range(0, len(multi), batch):
+    n_groups = (len(multi) + batch - 1) // batch
+    groups_done = 0
+    if local_art is not None:
+        ex_idx.append(np.asarray(local_art["ex_idx"]))
+        masses.append(np.asarray(local_art["masses"]))
+        groups_done = int(local_art["groups_done"])
+        local_sweeps = int(local_art["local_sweeps"])
+        local_converged = bool(local_art["local_conv"])
+
+    def _save_local(done: int) -> None:
+        from repro.solver import checkpointing as ckp
+        ckp.save_stage(ckpt_dir, "local", {
+            "ex_idx": np.concatenate(ex_idx) if ex_idx
+            else np.zeros((0,), np.int64),
+            "masses": np.concatenate(masses) if masses
+            else np.zeros((0,), np.int64),
+            "groups_done": np.int64(done),
+            "local_sweeps": np.int64(local_sweeps),
+            "local_conv": np.int64(local_converged)})
+
+    for lo in range(groups_done * batch, len(multi), batch):
         group = multi[lo:lo + batch]
         pts = np.zeros((batch, bucket_n, x.shape[1]), np.float32)
         n_real = np.full((batch,), 2, np.int32)     # inert filler slots
@@ -220,6 +271,12 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
             local_sweeps = max(local_sweeps, rbr.n_sweeps)
             if rbr.converged is False:
                 local_converged = False
+        groups_done += 1
+        if ckpt_dir and (groups_done % ckpt_every == 0
+                         or groups_done == n_groups):
+            _save_local(groups_done)
+            faultinject.fire("solver.coarsen", stage="local",
+                             group=groups_done)
     for c in singles:                   # a lone point is its own exemplar
         ex_idx.append(c)
         masses.append(np.ones((1,), np.int64))
@@ -237,17 +294,36 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
                                 converged=conv, trace=None)
 
     # ---- global solve over the exemplar union, mass-derived preferences
-    if n_ex <= cfg.coarsen_global_dense_n:
-        gcfg = cfg.replace(backend="dense_parallel", k=None)
+    if global_art is not None:
+        # stage-3 resume: the global solution is already on disk
+        g_exemplars = np.asarray(global_art["exemplars"])
+        g_sweeps = int(global_art["n_sweeps"])
+        g_conv_i = int(global_art["converged"])
+        g_converged = None if g_conv_i < 0 else bool(g_conv_i)
     else:
-        gcfg = cfg.replace(backend="dense_topk",
-                           k=min(cfg.coarsen_global_k, n_ex - 1))
-    gcfg = gcfg.replace(input_kind="points",
-                        preference=_global_preference(ex_pts, masses, cfg))
-    gres = solve(ex_pts, gcfg)
+        if n_ex <= cfg.coarsen_global_dense_n:
+            gcfg = cfg.replace(backend="dense_parallel", k=None)
+        else:
+            gcfg = cfg.replace(backend="dense_topk",
+                               k=min(cfg.coarsen_global_k, n_ex - 1))
+        gcfg = gcfg.replace(
+            input_kind="points",
+            preference=_global_preference(ex_pts, masses, cfg))
+        gres = solve(ex_pts, gcfg)
+        g_exemplars = np.asarray(gres.exemplars)
+        g_sweeps = gres.n_sweeps
+        g_converged = gres.converged
+        if ckpt_dir:
+            from repro.solver import checkpointing as ckp
+            ckp.save_stage(ckpt_dir, "global", {
+                "exemplars": g_exemplars.astype(np.int64),
+                "n_sweeps": np.int64(g_sweeps),
+                "converged": np.int64(
+                    -1 if g_converged is None else int(g_converged))})
+            faultinject.fire("solver.coarsen", stage="global")
 
     # ---- broadcast-assign: nearest global exemplar, row+column chunked
-    g_uniq = np.unique(gres.exemplars[0])
+    g_uniq = np.unique(g_exemplars[0])
     row_chunk = int(max(256, min(65536,
                                  _ASSIGN_BLOCK_ELEMS // max(len(g_uniq), 1))))
     labels, _ = assign_nearest_exemplar(
@@ -257,11 +333,11 @@ def run_coarsen(x: np.ndarray, cfg: SolveConfig) -> RawBackendResult:
     # exemplar — the two coarsen tiers spliced into the HAP hierarchy
     # (level 0 reduces to the global exemplar itself: canonicalized
     # exemplars are self-exemplars).
-    e_out = ex_idx[gres.exemplars[:, g_uniq[labels]]].astype(np.int32)
+    e_out = ex_idx[g_exemplars[:, g_uniq[labels]]].astype(np.int32)
 
-    n_sweeps = max(local_sweeps, gres.n_sweeps)
+    n_sweeps = max(local_sweeps, g_sweeps)
     conv = None
     if cfg.stop == "converged":
-        conv = bool(local_converged and bool(gres.converged))
+        conv = bool(local_converged and bool(g_converged))
     return RawBackendResult(exemplars=e_out, n_sweeps=n_sweeps,
                             converged=conv, trace=None)

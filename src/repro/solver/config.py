@@ -137,6 +137,20 @@ class SolveConfig:
     # per-point preference array (and for graph_affinity itself).
     preseed: str = "off"                # off|graph
 
+    # checkpoint/resume (repro.solver.checkpointing; dense_topk and
+    # coarsen only). checkpoint_every > 0 snapshots solve progress into
+    # checkpoint_dir via repro.checkpoint: for dense_topk (single and
+    # sweep="sharded") the compressed message state + sweep index every
+    # that many sweeps; for coarsen, per-stage artifacts every that many
+    # local batch groups plus one after the global solve, so a stage-3
+    # crash resumes at stage 3. resume_from restarts from the newest
+    # checkpoint in that directory, bit-exact with the uninterrupted
+    # solve (same exemplars, same trace tail); the run's config/shape
+    # key is validated against the checkpoint's sidecar metadata.
+    checkpoint_every: int = 0
+    checkpoint_dir: Optional[str] = None
+    resume_from: Optional[str] = None
+
     # sharded_streaming
     shard_size: int = 512
     pref_scale: float = 1.0

@@ -82,7 +82,8 @@ def _assignments(state: hap.HAPState) -> jnp.ndarray:
 
 def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
                  max_iterations: int, stop: str, patience: int,
-                 count_mask=None, axis_name: str | None = None):
+                 count_mask=None, axis_name: str | None = None,
+                 segmented: bool = False, carry=None, until=None):
     """The one stopping-rule loop every single-device backend shares.
 
     ``sweep(state, it) -> state`` and ``assign(state) -> (L, N) int32``
@@ -101,6 +102,18 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
     lockstep on the same sweep as the single-device run; ``count_mask``
     ((n,) bool) drops padding rows from the count, keeping the trace
     bit-identical to the unpadded oracle's.
+
+    Checkpointed callers (``repro.solver.checkpointing``) set
+    ``segmented=True`` to run one *segment* of the loop: ``carry`` is the
+    raw while_loop carry ``(state, e_prev, stable, it, trace)`` from the
+    previous segment (None = start fresh), ``until`` is a (possibly
+    traced) sweep index to pause at, and the return value is the raw
+    carry rather than the finished ``(state, e, n_sweeps, converged,
+    trace)`` contract. Segments always take the while_loop path — also
+    for ``stop="fixed"``, where the patience condition is disabled — so
+    the checkpointed program is the *same* op sequence regardless of
+    where the segment boundaries fall, which is what makes resume
+    bit-exact by construction.
     """
     e0 = jnp.full((levels, n), -1, jnp.int32)
     if axis_name is not None:
@@ -116,7 +129,7 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
             changed = jax.lax.psum(changed, axis_name)
         return changed
 
-    if stop == "fixed":
+    if stop == "fixed" and not segmented:
         def step(carry, it):
             state, e_prev = carry
             state = sweep(state, it)
@@ -128,12 +141,17 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
         return (state, e, jnp.int32(max_iterations), jnp.asarray(False),
                 trace)
 
-    # stop == "converged": fused while_loop with a patience counter
+    # stop == "converged" (or a checkpoint segment of either stopping
+    # rule): fused while_loop with a patience counter. Segments of
+    # stop="fixed" disable the patience exit and bound the loop by
+    # ``until`` instead of max_iterations.
+    patience_eff = patience if stop == "converged" else max_iterations + 1
+    until_val = jnp.int32(max_iterations if until is None else until)
     trace0 = jnp.full((max_iterations,), -1, jnp.int32)
 
     def cond(carry):
         _, _, stable, it, _ = carry
-        return (it < max_iterations) & (stable < patience)
+        return (it < until_val) & (stable < patience_eff)
 
     def body(carry):
         state, e_prev, stable, it, trace = carry
@@ -144,8 +162,11 @@ def drive_sweeps(init, sweep, assign, levels: int, n: int, *,
         trace = trace.at[it].set(changed)
         return (state, e, stable, it + 1, trace)
 
-    carry = (init, e0, jnp.int32(0), jnp.int32(0), trace0)
+    if carry is None:
+        carry = (init, e0, jnp.int32(0), jnp.int32(0), trace0)
     state, e, stable, it, trace = jax.lax.while_loop(cond, body, carry)
+    if segmented:
+        return state, e, stable, it, trace
     return state, e, it, stable >= patience, trace
 
 

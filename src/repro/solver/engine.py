@@ -31,9 +31,17 @@ from repro.core.preferences import make_preferences
 from repro.core.similarity import (
     pairwise_similarity, set_preferences, stack_levels,
 )
+from repro.runtime import degrade, faultinject
 from repro.solver.config import SolveConfig
 from repro.solver.registry import auto_select, get_backend
 from repro.solver.result import RawBackendResult, SolveResult
+
+#: graceful-degradation chain: a backend whose accelerated (Pallas) path
+#: raises falls back to the reference backend on the same similarity
+#: stack, recording a ``repro.runtime.degrade`` event instead of failing
+#: the solve. The two run the identical §3 schedule; only the kernel
+#: implementation differs.
+DEGRADE_FALLBACKS = {"dense_fused": "dense_parallel"}
 
 
 # ------------------------------------------------------------- validation
@@ -91,6 +99,14 @@ def validate_config(cfg: SolveConfig, n: int) -> None:
         raise ValueError(
             "SolveConfig.preseed must be 'off' or 'graph'; "
             f"got {cfg.preseed!r}")
+    if cfg.checkpoint_every < 0:
+        raise ValueError(
+            "SolveConfig.checkpoint_every must be >= 0 "
+            f"(got {cfg.checkpoint_every}); 0 disables checkpointing")
+    if cfg.checkpoint_every > 0 and not cfg.checkpoint_dir:
+        raise ValueError(
+            "SolveConfig.checkpoint_every > 0 needs checkpoint_dir to "
+            "write the snapshots into")
     if cfg.backend == "coarsen":
         from repro.solver.coarsen import check_coarsen_config
         check_coarsen_config(cfg)
@@ -140,9 +156,15 @@ def _build_similarity(x: np.ndarray, cfg: SolveConfig, backend: str):
     """Points -> (L, N, N) stack with preferences on the diagonal."""
     xj = jnp.asarray(x)
     if backend == "dense_fused" and cfg.metric == "neg_sqeuclidean":
-        # the fused path builds S with the Pallas similarity kernel too
+        # the fused path builds S with the Pallas similarity kernel too;
+        # a platform that rejects the kernel degrades to the jnp build
         from repro.kernels import ops
-        s = ops.neg_sqeuclidean(xj, block=cfg.block)
+        try:
+            s = ops.neg_sqeuclidean(xj, block=cfg.block)
+        except Exception as exc:  # noqa: BLE001 — degrade, don't fail
+            degrade.record("build.neg_sqeuclidean_pallas",
+                           "pairwise_similarity", exc)
+            s = pairwise_similarity(xj, metric=cfg.metric)
     else:
         s = pairwise_similarity(xj, metric=cfg.metric)
     pref = cfg.preference
@@ -243,6 +265,14 @@ def solve(data, config: Optional[SolveConfig] = None,
             cfg=cfg, has_edges=el is not None)
     spec = get_backend(backend)
 
+    if cfg.checkpoint_every > 0 or cfg.resume_from:
+        from repro.solver.checkpointing import CHECKPOINT_BACKENDS
+        if backend not in CHECKPOINT_BACKENDS:
+            raise ValueError(
+                f"checkpoint/resume is supported by {CHECKPOINT_BACKENDS} "
+                f"(the long-running paths), not backend {backend!r}; drop "
+                "checkpoint_every/resume_from or pick a supported backend")
+
     if spec.needs_points and x is None:
         hint = (" — an EdgeList carries no point coordinates"
                 if el is not None else "")
@@ -288,9 +318,27 @@ def solve(data, config: Optional[SolveConfig] = None,
             s3, _ = pad_similarity(s3, multiple)
             raw = spec.run(s3, cfg.replace(mesh=mesh))
         else:
-            raw = spec.run(s3, cfg)
+            raw = _run_degradable(spec, s3, cfg, backend)
 
     return _finalize(raw, n, backend)
+
+
+def _run_degradable(spec, s3, cfg: SolveConfig, backend: str
+                    ) -> RawBackendResult:
+    """Run a similarity-stack backend with the graceful-degradation
+    chain: if its accelerated path raises and ``DEGRADE_FALLBACKS`` maps
+    it to a reference backend, record the event and re-run there —
+    same stack, same schedule, solve succeeds. The ``solver.backend``
+    faultinject site makes the chain deterministically testable."""
+    fallback = DEGRADE_FALLBACKS.get(backend)
+    try:
+        faultinject.fire("solver.backend", backend=backend)
+        return spec.run(s3, cfg)
+    except Exception as exc:  # noqa: BLE001 — degrade, don't fail
+        if fallback is None:
+            raise
+        degrade.record(f"backend.{backend}", fallback, exc)
+        return get_backend(fallback).run(s3, cfg)
 
 
 def finalize_raw(raw: RawBackendResult, n: int, backend: str) -> SolveResult:

@@ -190,30 +190,13 @@ def compress_stack(s3: jnp.ndarray, k: int
     return s3k, idx_full
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("max_iterations", "damping", "kappa", "s_mode",
-                     "stop", "patience"))
-def run_topk(
-    s3k: jnp.ndarray,
-    idx: jnp.ndarray,
-    *,
-    max_iterations: int,
-    damping: float = 0.5,
-    kappa: float = 0.0,
-    s_mode: str = "off",
-    stop: str = "fixed",
-    patience: int = 5,
-):
-    """Run the sparse Jacobi schedule on a compressed (L, N, kk) stack.
+def make_topk_sweep(idx: jnp.ndarray, *, damping: float, kappa: float,
+                    s_mode: str):
+    """Build the ``(sweep, assign)`` pair for the compressed layout.
 
-    Same return contract as ``run_dense``:
-    ``(state, exemplars, n_sweeps, converged, trace)``.
-    """
-    s3k = s3k.astype(jnp.float32)
-    levels, n, _ = s3k.shape
-    init = hap.hap_init(s3k)
-
+    One definition shared by ``run_topk`` and the checkpointed segment
+    runner (``repro.solver.checkpointing``) — both must execute the
+    identical op sequence per sweep for resume to be bit-exact."""
     reducers = hap.SweepReducers(
         tau=jax.vmap(lambda r, c: tau_topk(r, c, idx)),
         phi=jax.vmap(phi_topk),
@@ -238,6 +221,35 @@ def run_topk(
     def assign(state):
         return jax.vmap(lambda al, rl: assignments_topk(al, rl, idx))(
             state.a, state.r)
+
+    return sweep, assign
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("max_iterations", "damping", "kappa", "s_mode",
+                     "stop", "patience"))
+def run_topk(
+    s3k: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    max_iterations: int,
+    damping: float = 0.5,
+    kappa: float = 0.0,
+    s_mode: str = "off",
+    stop: str = "fixed",
+    patience: int = 5,
+):
+    """Run the sparse Jacobi schedule on a compressed (L, N, kk) stack.
+
+    Same return contract as ``run_dense``:
+    ``(state, exemplars, n_sweeps, converged, trace)``.
+    """
+    s3k = s3k.astype(jnp.float32)
+    levels, n, _ = s3k.shape
+    init = hap.hap_init(s3k)
+    sweep, assign = make_topk_sweep(idx, damping=damping, kappa=kappa,
+                                    s_mode=s_mode)
 
     state, e, n_sweeps, conv, trace = dense.drive_sweeps(
         init, sweep, assign, levels, n, max_iterations=max_iterations,

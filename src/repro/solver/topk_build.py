@@ -92,9 +92,21 @@ def _local_build(x, k, cfg: SolveConfig, backend: str, *,
             raise ValueError("build='fused' is single-device; the sharded "
                              "driver runs jnp builds per worker")
         from repro.kernels.topk_build_fused import topk_similarity_fused
-        return topk_similarity_fused(
-            x, k, block_rows=min(cfg.build_block_rows, 256),
-            block_cols=min(cfg.build_block_cols, 1024))
+        try:
+            from repro.runtime import faultinject
+            faultinject.fire("build.fused", n=int(x.shape[0]), k=k)
+            return topk_similarity_fused(
+                x, k, block_rows=min(cfg.build_block_rows, 256),
+                block_cols=min(cfg.build_block_cols, 1024))
+        except Exception as exc:  # noqa: BLE001 — degrade, don't fail
+            # a platform that rejects the Pallas build falls back to the
+            # reference scan — bit-identical edge set, just slower
+            from repro.runtime import degrade
+            degrade.record("build.fused", "reference", exc)
+            return topk_similarity(
+                x, k, metric=cfg.metric, block_rows=cfg.build_block_rows,
+                block_cols=cfg.build_block_cols, use_pallas=False,
+                cols=cols, row_offset=row_offset)
     return topk_similarity(
         x, k, metric=cfg.metric, block_rows=cfg.build_block_rows,
         block_cols=cfg.build_block_cols,

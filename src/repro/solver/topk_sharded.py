@@ -160,12 +160,23 @@ def comm_bytes_per_sweep(n: int, k: int, levels: int, workers: int,
 def _sharded_program(mesh, levels: int, n_local: int, n_total: int,
                      n_real: int, kk: int, max_iterations: int,
                      damping: float, kappa: float, s_mode: str, stop: str,
-                     patience: int, exchange: str):
+                     patience: int, exchange: str,
+                     segmented: bool = False, with_carry: bool = False):
     """Jitted whole-loop shard_map program, cached per mesh/config so
     repeated solves hit XLA's compile cache (the ``_mrhap_program``
-    idiom)."""
+    idiom).
 
-    def body(s_loc: jnp.ndarray, idx_loc: jnp.ndarray):
+    ``segmented`` compiles the checkpoint-segment variant
+    (``repro.solver.checkpointing``): an extra replicated (1,) ``until``
+    operand bounds the while_loop (dynamic, so every segment of a solve
+    reuses ONE compiled program), and the raw loop carry comes back
+    instead of the finished contract. ``with_carry`` additionally takes
+    the previous segment's carry — sharded state/exemplars plus the
+    replicated stable/it/trace — as inputs; two compilations total
+    (fresh first segment, resumed segments), regardless of how many
+    segment boundaries a solve crosses."""
+
+    def body(s_loc: jnp.ndarray, idx_loc: jnp.ndarray, *rest):
         rows = idx_loc[:, 0]                       # global row ids (self slot)
         if exchange == "allgather":
             idx_full = jax.lax.all_gather(idx_loc, AXIS, axis=0, tiled=True)
@@ -226,21 +237,43 @@ def _sharded_program(mesh, levels: int, n_local: int, n_total: int,
         vary = lambda x: pvary(x, (AXIS,))
         init = init._replace(tau=vary(init.tau), phi=vary(init.phi),
                              c=vary(init.c))
+        scal = lambda v: vary(jnp.reshape(v, (1,)))
 
-        state, e, n_sweeps, conv, trace = dense.drive_sweeps(
+        if not segmented:
+            state, e, n_sweeps, conv, trace = dense.drive_sweeps(
+                init, sweep, assign, levels, n_local,
+                max_iterations=max_iterations, stop=stop, patience=patience,
+                count_mask=rows < n_real, axis_name=AXIS)
+            return state, e, scal(n_sweeps), scal(conv), vary(trace)[None]
+
+        # segment variant: rest = (until[, carry...]). stable/it/trace
+        # stay device-invariant through the loop (the change counter is
+        # psum-ed), so the replicated carry inputs match without pvary.
+        until = rest[0][0]
+        if with_carry:
+            c_state, c_e, c_stable, c_it, c_trace = rest[1:]
+            carry = (c_state, c_e, c_stable[0], c_it[0], c_trace)
+        else:
+            carry = None
+        state, e, stable, it, trace = dense.drive_sweeps(
             init, sweep, assign, levels, n_local,
             max_iterations=max_iterations, stop=stop, patience=patience,
-            count_mask=rows < n_real, axis_name=AXIS)
-        scal = lambda v: vary(jnp.reshape(v, (1,)))
-        return state, e, scal(n_sweeps), scal(conv), vary(trace)[None]
+            count_mask=rows < n_real, axis_name=AXIS,
+            segmented=True, carry=carry, until=until)
+        return state, e, scal(stable), scal(it), vary(trace)[None]
 
     row3 = P(None, AXIS, None)
     row2 = P(None, AXIS)
     state_spec = hap.HAPState(s=row3, r=row3, a=row3,
                               tau=row2, phi=row2, c=row2)
+    in_specs = [row3, P(AXIS, None)]
+    if segmented:
+        in_specs.append(P(None))                   # until
+        if with_carry:
+            in_specs += [state_spec, row2, P(None), P(None), P(None)]
     return jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(row3, P(AXIS, None)),
+        in_specs=tuple(in_specs),
         out_specs=(state_spec, row2, P(AXIS), P(AXIS), P(AXIS, None))))
 
 

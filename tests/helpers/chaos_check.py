@@ -1,0 +1,93 @@
+"""Standalone chaos harness: kill a worker under load, prove recovery.
+
+The ISSUE-10 acceptance scenario, deterministic end to end: a 4-worker
+``ClusterService`` takes Poisson traffic through its threaded scheduler
+while a seeded ``FaultInjector`` kills worker 1's launches. Asserts:
+
+* zero lost futures — ``run_load`` joins every future; a hang raises;
+* zero failed requests — killed batches retry on survivors inside each
+  rider's deadline;
+* the dead worker resurrects (fresh warmed compile cache) and a clean
+  follow-up load runs error-free with a sane p99 (recovery, not limp);
+* the recovery counters (worker_deaths / retried_batches /
+  requeued_requests / resurrections) account for what happened.
+
+Exits nonzero on any violation. Seeded injection means a failure here
+replays exactly — rerun with the same seed to debug.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import sys
+
+import numpy as np
+
+from repro.runtime import faultinject
+from repro.runtime.faultinject import FaultInjector, Rule
+from repro.serve.cluster import ClusterService
+from repro.serve.cluster.loadgen import run_load, synthetic_requests
+from repro.solver.config import SolveConfig
+
+
+def main() -> int:
+    svc = ClusterService(
+        config=SolveConfig(stop="converged", max_iterations=60,
+                           damping=0.6, preference="median"),
+        buckets=[(64, 2, 4)], auto_bucket=False, workers=4,
+        max_queue=64, max_wait_ms=1.0, worker_cooldown_s=0.2,
+        max_retries=3, retry_backoff_ms=2.0)
+    warm = svc.warmup()
+    print(f"warmup: {warm['misses']} compiles "
+          f"({warm['compile_seconds']:.1f}s)")
+
+    reqs = synthetic_requests(60, [(64, 2)], seed=1)
+    baseline = run_load(svc, reqs, rps=40.0, seed=1, deadline_ms=2000.0)
+    assert baseline.n_errors == 0, f"baseline errors: {baseline}"
+    print(f"baseline: p99={baseline.p99_ms:.1f}ms "
+          f"({baseline.n_requests} requests, 0 errors)")
+
+    # chaos window: worker 1's first three launches die (after each
+    # death the worker sits out the cooldown, resurrects with a fresh
+    # cache, and the rule kills it again until exhausted)
+    inj = FaultInjector(seed=7).add(
+        Rule("serve.launch", nth=0, times=3, match={"worker": 1}))
+    with faultinject.active(inj):
+        chaos = run_load(svc, synthetic_requests(60, [(64, 2)], seed=2),
+                         rps=40.0, seed=2, deadline_ms=2000.0)
+    s = svc.stats
+    print(f"chaos: p99={chaos.p99_ms:.1f}ms, "
+          f"errors={chaos.n_errors}/{chaos.n_requests}, "
+          f"injected={len(inj.events)}, deaths={s.worker_deaths}, "
+          f"retried={s.retried_batches}, requeued={s.requeued_requests}, "
+          f"resurrections={s.resurrections}")
+    assert chaos.n_requests == 60, "lost records"
+    assert chaos.n_errors == 0, (
+        f"futures failed under chaos: {chaos.n_errors} "
+        "(riders must retry onto survivors)")
+    assert len(inj.events) >= 1, "the injected fault never fired"
+    assert s.worker_deaths >= 1, "no worker death recorded"
+    assert s.retried_batches + s.requeued_requests >= 1, (
+        "no retry/requeue despite a worker death")
+    assert s.resurrections >= 1, "dead worker never resurrected"
+
+    # recovery: a clean load after the chaos window is error-free and
+    # within a generous factor of the baseline p99 (recovered, not
+    # limping along on fewer workers)
+    recovered = run_load(svc, synthetic_requests(60, [(64, 2)], seed=3),
+                         rps=40.0, seed=3, deadline_ms=2000.0)
+    print(f"recovered: p99={recovered.p99_ms:.1f}ms, "
+          f"errors={recovered.n_errors}")
+    assert recovered.n_errors == 0, f"post-chaos errors: {recovered}"
+    assert recovered.p99_ms < max(10.0 * baseline.p99_ms, 500.0), (
+        f"post-chaos p99 {recovered.p99_ms:.1f}ms never recovered "
+        f"(baseline {baseline.p99_ms:.1f}ms)")
+    unhealthy = [w["worker"] for w in svc.snapshot()["workers"]
+                 if not w["healthy"]]
+    assert not unhealthy, f"workers still down after recovery: {unhealthy}"
+    print("chaos check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

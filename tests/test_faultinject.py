@@ -1,0 +1,153 @@
+"""Deterministic fault injection (repro.runtime.faultinject) and the
+graceful kernel-degradation chains it exercises (repro.runtime.degrade).
+
+The injector is the chaos harness's trigger: the same seed must fire the
+same faults on every run, so a failing chaos run replays exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.data import gaussian_blobs
+from repro.runtime import degrade, faultinject
+from repro.runtime.faultinject import FaultInjector, InjectedFault, Rule
+from repro.solver import SolveConfig, solve
+
+
+# ------------------------------------------------------------- injector
+def test_nth_rule_fires_exact_window():
+    inj = FaultInjector().add(Rule("site", nth=2, times=2))
+    fired = []
+    for i in range(6):
+        try:
+            inj._fire("site", {"i": i})
+            fired.append(False)
+        except InjectedFault:
+            fired.append(True)
+    assert fired == [False, False, True, True, False, False]
+    assert inj.hits("site") == 6
+    assert [e["hit"] for e in inj.events] == [2, 3]
+
+
+def test_match_filters_hit_counter():
+    """match= restricts which fire() calls count toward the rule's own
+    hit counter — 'the 1st launch on worker 1' ignores worker 0 noise."""
+    inj = FaultInjector().add(Rule("launch", nth=1, match={"worker": 1}))
+    seen = []
+    for w in (0, 1, 0, 1, 1):
+        try:
+            inj._fire("launch", {"worker": w})
+            seen.append("ok")
+        except InjectedFault:
+            seen.append("boom")
+    assert seen == ["ok", "ok", "ok", "boom", "ok"]
+
+
+def test_matchonly_rule_fires_first_hits():
+    inj = FaultInjector().add(Rule("s", match={"stage": "global"}))
+    inj._fire("s", {"stage": "local"})       # filtered out, no fire
+    with pytest.raises(InjectedFault):
+        inj._fire("s", {"stage": "global"})
+    inj._fire("s", {"stage": "global"})      # times=1 exhausted
+
+
+def test_prob_rule_is_seed_deterministic():
+    def firing_pattern(seed):
+        inj = FaultInjector(seed=seed).add(
+            Rule("p", prob=0.3, times=1000))
+        out = []
+        for i in range(40):
+            try:
+                inj._fire("p", {})
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+    a, b, c = firing_pattern(7), firing_pattern(7), firing_pattern(8)
+    assert a == b                  # same seed -> identical chaos
+    assert a != c                  # different seed -> different chaos
+    assert 0 < sum(a) < 40         # prob=0.3 actually fires sometimes
+
+
+def test_custom_exception_type():
+    class Boom(RuntimeError):
+        pass
+    inj = FaultInjector().add(Rule("x", nth=0, exc=Boom))
+    with pytest.raises(Boom):
+        inj._fire("x", {})
+
+
+def test_active_context_installs_and_clears():
+    assert faultinject.get() is None
+    inj = FaultInjector()
+    with faultinject.active(inj) as got:
+        assert got is inj and faultinject.get() is inj
+        faultinject.fire("anything", foo=1)       # counted, no rule
+        assert inj.hits("anything") == 1
+    assert faultinject.get() is None
+    faultinject.fire("anything")                  # no-op when cleared
+    assert inj.hits("anything") == 1
+
+
+# ----------------------------------------------------------- degradation
+def _pts(n=96, seed=0):
+    x, _ = gaussian_blobs(n=n, k=4, seed=seed, spread=0.3, box=12.0)
+    return x
+
+
+def test_backend_degrades_fused_to_parallel():
+    """A raising dense_fused run falls back to dense_parallel — same
+    labels, a recorded degradation event, the requested backend name kept
+    (the caller asked for dense_fused; the event says what really ran)."""
+    x = _pts()
+    cfg = SolveConfig(backend="dense_fused", stop="converged",
+                      max_iterations=80, preference="median")
+    want = solve(x, cfg.replace(backend="dense_parallel"))
+    degrade.clear()
+    inj = FaultInjector().add(
+        Rule("solver.backend", match={"backend": "dense_fused"}))
+    with faultinject.active(inj):
+        res = solve(x, cfg)
+    np.testing.assert_array_equal(res.labels, want.labels)
+    np.testing.assert_array_equal(res.exemplars, want.exemplars)
+    assert res.backend == "dense_fused"
+    evs = [e for e in degrade.events()
+           if e["site"] == "backend.dense_fused"]
+    assert evs and evs[-1]["fallback"] == "dense_parallel"
+
+
+def test_backend_without_fallback_raises():
+    """Backends with no registered fallback must not swallow failures."""
+    x = _pts()
+    inj = FaultInjector().add(
+        Rule("solver.backend", match={"backend": "dense_parallel"}))
+    with faultinject.active(inj), pytest.raises(InjectedFault):
+        solve(x, SolveConfig(backend="dense_parallel",
+                             preference="median"))
+
+
+def test_fused_build_degrades_to_reference():
+    """A raising Pallas fused top-k build degrades to the reference scan
+    — bit-identical edge set, so the solve result is bit-identical."""
+    x = _pts(n=128)
+    cfg = SolveConfig(backend="dense_topk", k=16, build="fused",
+                      stop="converged", max_iterations=80,
+                      preference="median")
+    want = solve(x, cfg.replace(build="reference"))
+    degrade.clear()
+    inj = FaultInjector().add(Rule("build.fused"))
+    with faultinject.active(inj):
+        res = solve(x, cfg)
+    np.testing.assert_array_equal(res.labels, want.labels)
+    np.testing.assert_array_equal(res.exemplars, want.exemplars)
+    evs = [e for e in degrade.events() if e["site"] == "build.fused"]
+    assert evs and evs[-1]["fallback"] == "reference"
+
+
+def test_degrade_event_log_is_bounded():
+    degrade.clear()
+    for i in range(400):
+        degrade.record(f"site{i}", "fb", RuntimeError("x"))
+    assert len(degrade.events()) == 256
+    assert degrade.events()[-1]["site"] == "site399"
+    degrade.clear()
+    assert degrade.events() == []

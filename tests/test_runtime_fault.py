@@ -1,0 +1,97 @@
+"""Restart orchestration (repro.runtime.fault) and elastic-transition
+validation (repro.runtime.elastic.validate_mesh_change)."""
+import pytest
+
+from repro.runtime.elastic import validate_mesh_change
+from repro.runtime.fault import FaultPolicy, run_with_restarts
+
+
+# ------------------------------------------------------ run_with_restarts
+def test_default_policy_is_fresh_per_call():
+    """The policy default must be constructed per call — a shared
+    mutable default would let one caller's tweaks leak into the next."""
+    import inspect
+    sig = inspect.signature(run_with_restarts)
+    assert sig.parameters["policy"].default is None
+
+
+def test_succeeds_after_transient_failures():
+    calls = {"n": 0}
+
+    def run_fn(state):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return state + calls["n"]
+
+    out = run_with_restarts(run_fn, lambda: 100,
+                            FaultPolicy(max_restarts=3, backoff_s=0.0))
+    assert out == 103 and calls["n"] == 3
+
+
+def test_restore_fn_called_every_attempt():
+    restores = {"n": 0}
+
+    def restore():
+        restores["n"] += 1
+        return restores["n"]
+
+    def run_fn(state):
+        if state < 2:
+            raise RuntimeError("die")
+        return state
+
+    assert run_with_restarts(run_fn, restore,
+                             FaultPolicy(backoff_s=0.0)) == 2
+    assert restores["n"] == 2
+
+
+def test_exceeding_max_restarts_raises_last_error():
+    def run_fn(state):
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError, match="permanent"):
+        run_with_restarts(run_fn, lambda: None,
+                          FaultPolicy(max_restarts=2, backoff_s=0.0))
+
+
+def test_keyboard_interrupt_propagates_immediately():
+    calls = {"n": 0}
+
+    def run_fn(state):
+        calls["n"] += 1
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        run_with_restarts(run_fn, lambda: None,
+                          FaultPolicy(max_restarts=5, backoff_s=0.0))
+    assert calls["n"] == 1          # not retried
+
+
+# -------------------------------------------------- validate_mesh_change
+def test_mesh_change_clean_transition_no_warnings():
+    assert validate_mesh_change({"data": 8}, {"data": 4},
+                                global_batch=64) == [
+        "data extent shrank: per-device batch grows; "
+        "check activation memory headroom"]
+    assert validate_mesh_change({"data": 4}, {"data": 8},
+                                global_batch=64) == []
+
+
+def test_mesh_change_warns_on_indivisible_batch():
+    ws = validate_mesh_change({"data": 4}, {"data": 3}, global_batch=64)
+    assert any("not divisible" in w for w in ws)
+
+
+def test_mesh_change_warns_on_model_extent_change():
+    ws = validate_mesh_change({"data": 4, "model": 2},
+                              {"data": 4, "model": 4}, global_batch=64)
+    assert ws == ["model-parallel extent changed: parameter layout moves "
+                  "between devices (full reshard, ~2x checkpoint-size "
+                  "traffic)"]
+
+
+def test_mesh_change_counts_pod_axis_in_data_extent():
+    ws = validate_mesh_change({"data": 2, "pod": 2}, {"data": 2, "pod": 1},
+                              global_batch=32)
+    assert any("shrank" in w for w in ws)
